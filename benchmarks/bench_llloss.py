@@ -1,0 +1,91 @@
+"""Paper Tab. 7: latency-aware load-balancing loss ablation.
+
+Trains the MoE-of-primitives router with and without the LL-loss on the
+synthetic image task, then reports the *modeled synchronization latency* of
+the MoE layer: with parallel heterogeneous experts the layer takes
+max_e(tokens_e · per_token_latency_e); the LL-loss should shift load toward
+the fast expert and cut that max (the paper reports ~14.6% at iso-accuracy).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policy import ShiftAddPolicy
+from repro.data.pipeline import SyntheticImageData
+from repro.nn.vit import ShiftAddViT, ViTConfig
+from repro.optim.optimizer import adamw
+
+
+def _run(latency_aware, balance_weight, steps=150):
+    policy = ShiftAddPolicy(mlp="moe_primitives", latency_aware=latency_aware,
+                            balance_loss_weight=balance_weight)
+    cfg = ViTConfig(image_size=16, patch_size=4, n_classes=4, n_layers=2,
+                    d_model=48, n_heads=2, d_ff=96, policy=policy,
+                    moe_capacity=4.0)
+    model = ShiftAddViT(cfg)
+    # At demo dims (d=48) the analytic Mult/Shift latency ratio is ~1.0
+    # (activation bytes dominate both); pin the deployment-scale ratio
+    # (weight-bound regime, packed int8 vs bf16 ⇒ ~2:1) so α_i reflects the
+    # regime the paper's Tab. 7 operates in.
+    for blk in model.blocks:
+        blk.feed.latencies = [2.0e-5, 1.0e-5]
+    params = model.init(jax.random.PRNGKey(0))
+    data = SyntheticImageData(image_size=16, n_classes=4, global_batch=32,
+                              seed=3)
+    opt = adamw(3e-3, weight_decay=0.0)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state, batch):
+        (loss, m), grads = jax.value_and_grad(model.loss, has_aux=True)(
+            params, batch)
+        params, state = opt.update(grads, state, params)
+        return params, state, m
+
+    for i in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in data.batch_at(i).items()
+                 if k != "object_yx"}
+        params, state, m = step(params, state, batch)
+
+    # measure load split + accuracy on held-out batches
+    moe = model.blocks[0].feed
+    lat = np.asarray(moe.latencies)
+    sync, accs, splits = [], [], []
+    for i in range(8):
+        batch = {k: jnp.asarray(v) for k, v in data.batch_at(5000 + i).items()
+                 if k != "object_yx"}
+        _, m = model.loss(params, batch, train=False)
+        accs.append(float(m["acc"]))
+        _, aux = moe(params["blocks"][0]["feed"],
+                     model.patch_embed(params["patch_embed"],
+                                       model.patchify(batch["images"])),
+                     train=False)
+        tokens = np.asarray(aux["tokens_per_expert"], np.float64)
+        splits.append(tokens)
+        sync.append(np.max(tokens * lat))   # parallel experts: max finish time
+    return (float(np.mean(accs)), float(np.mean(sync)),
+            np.mean(splits, axis=0).round(1).tolist())
+
+
+def main(rows=None):
+    own = rows is None
+    rows = [] if own else rows
+    # Baseline = the paper's "previous solutions": homogeneous experts,
+    # treated equally (uniform-α balance loss); LL arm = latency-aware α.
+    acc_no, sync_no, split_no = _run(latency_aware=False, balance_weight=0.01)
+    acc_ll, sync_ll, split_ll = _run(latency_aware=True, balance_weight=0.01)
+    rows.append(("llloss_without", 0.0,
+                 f"acc={acc_no:.3f};norm_latency=100%;split={split_no}"))
+    rows.append(("llloss_with", 0.0,
+                 f"acc={acc_ll:.3f};norm_latency={sync_ll / sync_no:.1%};"
+                 f"split={split_ll}"))
+    if own:
+        for r in rows:
+            print(",".join(str(c) for c in r))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

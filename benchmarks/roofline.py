@@ -1,0 +1,141 @@
+"""§Roofline: three-term roofline per (arch × shape × mesh) from the dry-run
+artifacts (launch/dryrun.py writes one JSON per cell).
+
+    t_compute    = HLO_FLOPs_per_device / peak            (bf16 MXU)
+    t_memory     = HLO_bytes_per_device / HBM_bw
+    t_collective = collective_bytes_per_device / link_bw
+
+All inputs are per-device (post-SPMD HLO), trip-count-corrected by
+launch.hlo_analysis. Dominant term = bottleneck. MODEL_FLOPS ratio =
+(6·N·D or 2·N·D) / (HLO_FLOPs × devices) — how much compiled compute is
+"useful". Roofline fraction = t_compute / max(all terms): the fraction of
+the cell's time the MXU would be busy if terms overlapped perfectly.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.energy import HBM_BW, ICI_BW, PEAK_FLOPS_BF16  # noqa: E402
+from repro.configs.registry import get_config  # noqa: E402
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def analytic_bytes_per_device(rec):
+    """Napkin HBM-traffic model (per device, per step) — the TPU-lowering
+    counterpart of the CPU-HLO write-once estimate (which is inflated by f32
+    upcasts and scan-stacked backward buffers; see EXPERIMENTS.md §Roofline).
+
+    Terms: optimizer state traffic (train), weight reads per microbatch×layer
+    (fwd [+ bwd ×2]), activation traffic (~A materialized tensors of
+    tokens×d_model per layer), logits, KV-cache/state traffic (decode).
+    Attention scores are assumed VMEM-resident (flash-style chunking).
+    """
+    cfg = get_config(rec["arch"])
+    dev = rec["n_devices"]
+    model_par = 16
+    p_dev = rec["n_params"] / dev                 # fully sharded (data×model)
+    p_model_shard = rec["n_params"] / model_par   # after data all-gather
+    active_frac = rec["n_params_active"] / max(rec["n_params"], 1)
+    kind = rec["kind"]
+    b, n = rec["global_batch"], rec["seq_len"]
+
+    if kind == "train":
+        n_micro = 16
+        tokens_dev_micro = b * n / (dev / model_par) / n_micro
+        opt = p_dev * 24.0                        # f32 p/m/v read+write
+        weights = n_micro * p_model_shard * active_frac * 2.0 * 3.0  # fwd+bwd
+        acts = n_micro * cfg.n_layers * tokens_dev_micro * cfg.d_model * 2.0 * 30.0
+        logits = n_micro * tokens_dev_micro * (cfg.vocab_size / model_par) * 4.0 * 3.0
+        return opt + weights + acts + logits
+    if kind == "prefill":
+        tokens_dev = b * n / (dev / model_par)
+        weights = p_model_shard * active_frac * 2.0
+        acts = cfg.n_layers * tokens_dev * cfg.d_model * 2.0 * 10.0
+        logits = tokens_dev * (cfg.vocab_size / model_par) * 2.0
+        return weights + acts + logits
+    # decode: weights once per token + cache traffic
+    weights = p_model_shard * active_frac * 2.0
+    cache = rec["memory"]["argument_bytes"]       # per-device cache+params
+    return weights + cache
+
+
+def terms(rec):
+    t_c = rec["hlo_flops_per_device"] / PEAK_FLOPS_BF16
+    t_m_hlo = rec["hlo_bytes_per_device"] / HBM_BW
+    t_m_ana = analytic_bytes_per_device(rec) / HBM_BW
+    t_m_xla = rec.get("xla_cost", {}).get("bytes accessed", 0.0) / HBM_BW
+    # Ring-cost-aware wire bytes: all-reduce moves 2·(n-1)/n · operand bytes,
+    # all-gather / reduce-scatter / all-to-all move (n-1)/n — double AR so
+    # reduce-scatter-based strategies get fair credit.
+    bd = rec.get("collective_breakdown", {})
+    coll = sum(bd.values()) + bd.get("all-reduce", 0.0)
+    if not bd:
+        coll = rec["collective_bytes_per_device"]
+    t_x = coll / ICI_BW
+    t_m = t_m_ana                                  # dominant-call uses analytic
+    dominant = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))[1]
+    bound = max(t_c, t_m, t_x)
+    useful = rec["model_flops_global"] / max(
+        rec["hlo_flops_per_device"] * rec["n_devices"], 1.0)
+    return {
+        "t_compute": t_c, "t_memory": t_m, "t_memory_hlo": t_m_hlo,
+        "t_memory_xla": t_m_xla, "t_collective": t_x,
+        "dominant": dominant,
+        "roofline_fraction": t_c / bound if bound else 0.0,
+        "model_flops_ratio": useful,
+    }
+
+
+def load(artifact_dir=None, pattern="*.json"):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(artifact_dir or ARTIFACT_DIR, pattern))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def report(artifact_dir=None, csv=True):
+    rows = []
+    for rec in load(artifact_dir):
+        if rec.get("skipped"):
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": rec["mesh"], "policy": rec["policy"],
+                         "skipped": rec["reason"]})
+            continue
+        t = terms(rec)
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+            "policy": rec["policy"],
+            "t_compute_s": t["t_compute"], "t_memory_s": t["t_memory"],
+            "t_memory_hlo_s": t["t_memory_hlo"],
+            "t_collective_s": t["t_collective"], "dominant": t["dominant"],
+            "roofline_fraction": t["roofline_fraction"],
+            "model_flops_ratio": t["model_flops_ratio"],
+            "temp_GiB": rec["memory"]["temp_bytes"] / 2**30,
+            "args_GiB": rec["memory"]["argument_bytes"] / 2**30,
+        })
+    if csv:
+        cols = ["arch", "shape", "mesh", "policy", "t_compute_s", "t_memory_s",
+                "t_memory_hlo_s", "t_collective_s", "dominant",
+                "roofline_fraction", "model_flops_ratio", "temp_GiB",
+                "args_GiB", "skipped"]
+        print(",".join(cols))
+        for r in rows:
+            print(",".join(
+                f"{r.get(c):.5g}" if isinstance(r.get(c), float) else str(r.get(c, ""))
+                for c in cols))
+    return rows
+
+
+def main():
+    report(sys.argv[1] if len(sys.argv) > 1 else None)
+
+
+if __name__ == "__main__":
+    main()

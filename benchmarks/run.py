@@ -1,0 +1,38 @@
+"""Benchmark harness — one entry per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. The roofline table (§Roofline)
+is produced separately from the dry-run artifacts by benchmarks/roofline.py.
+
+  bench_kernels      — paper Fig. 4/5 + App. A (MatShift / MatAdd)
+  bench_breakdown    — paper Tab. 4/6 (variant latency/energy breakdown)
+  bench_energy       — paper Tab. 3 / Fig. 3 (45 nm analytic energy)
+  bench_sensitivity  — paper Tab. 2 (trains reduced ViTs; slowest)
+  bench_llloss       — paper Tab. 7 (LL-loss ablation; trains routers)
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    from benchmarks import (bench_breakdown, bench_energy, bench_kernels,
+                            bench_llloss, bench_sensitivity)
+
+    rows = []
+    for mod in (bench_kernels, bench_breakdown, bench_energy,
+                bench_sensitivity, bench_llloss):
+        t0 = time.time()
+        mod.main(rows)
+        rows.append((f"_{mod.__name__.split('.')[-1]}_wall",
+                     (time.time() - t0) * 1e6, "harness"))
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Paper Fig. 6: visualize the MoE router's token dispatch.
+
+Trains a ShiftAdd ViT (MoE-of-primitives MLP) on the synthetic
+object-classification task, then prints an ASCII map per image: `M` = token
+routed to the Mult expert, `.` = Shift expert, with the planted object's
+bounding box. The paper's hypothesis: object tokens → powerful Mult expert,
+background → cheap Shift expert.
+
+Run:  PYTHONPATH=src python examples/moe_routing_demo.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policy import ShiftAddPolicy
+from repro.data.pipeline import SyntheticImageData
+from repro.nn.vit import ShiftAddViT, ViTConfig
+from repro.optim.optimizer import adamw
+
+
+def main():
+    policy = ShiftAddPolicy(mlp="moe_primitives", latency_aware=True)
+    cfg = ViTConfig(image_size=16, patch_size=4, n_classes=4, n_layers=2,
+                    d_model=48, n_heads=2, d_ff=96, policy=policy)
+    model = ShiftAddViT(cfg)
+    # Deployment-scale expert latency ratio (Mult ≈ 2× Shift, weight-bound
+    # regime) so α_i gives the router a real cost signal; at demo dims the
+    # analytic estimate degenerates to ~1:1.
+    for blk in model.blocks:
+        blk.feed.latencies = [2.0e-5, 1.0e-5]
+    params = model.init(jax.random.PRNGKey(0))
+    data = SyntheticImageData(image_size=16, n_classes=4, global_batch=32,
+                              seed=3)
+    opt = adamw(3e-3, weight_decay=0.0)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state, batch):
+        (_, m), grads = jax.value_and_grad(model.loss, has_aux=True)(params, batch)
+        params, state = opt.update(grads, state, params)
+        return params, state, m
+
+    print("training ViT-MoE on the object task ...")
+    for i in range(400):
+        batch = {k: jnp.asarray(v) for k, v in data.batch_at(i).items()
+                 if k != "object_yx"}
+        params, state, m = step(params, state, batch)
+    print(f"  final acc {float(m['acc']):.3f}")
+
+    # Dispatch map of the first block's MoE for a few validation images.
+    raw = data.batch_at(7777)
+    imgs = jnp.asarray(raw["images"][:4])
+    x = model.patch_embed(params["patch_embed"], model.patchify(imgs))
+    _, aux = model.blocks[0].feed(params["blocks"][0]["feed"], x, train=False)
+    grid = cfg.image_size // cfg.patch_size
+    top1 = np.asarray(aux["top1"]).reshape(4, grid, grid)
+    obj_hits, bg_hits, obj_n, bg_n = 0, 0, 0, 0
+    for i in range(4):
+        y0, x0 = raw["object_yx"][i] // cfg.patch_size
+        print(f"image {i} (object at patch ({y0},{x0})):")
+        for r in range(grid):
+            line = "  "
+            for c in range(grid):
+                mult = top1[i, r, c] == 0
+                on_obj = (y0 <= r <= y0 + 1) and (x0 <= c <= x0 + 1)
+                line += "M" if mult else "."
+                if on_obj:
+                    obj_hits += int(mult)
+                    obj_n += 1
+                else:
+                    bg_hits += int(mult)
+                    bg_n += 1
+            print(line)
+    print(f"Mult-expert rate: object tokens {obj_hits / max(obj_n,1):.2f} "
+          f"vs background {bg_hits / max(bg_n,1):.2f}")
+    print(f"tokens/expert: {np.asarray(aux['tokens_per_expert'])}, "
+          f"alpha: {np.asarray(aux['alpha']).round(3)}")
+
+
+if __name__ == "__main__":
+    main()

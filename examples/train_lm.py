@@ -1,0 +1,77 @@
+"""End-to-end training driver: train an LM with the ShiftAdd policy, full
+production loop (checkpointing, fault tolerance, microbatching, LL-loss).
+
+Default size is CPU-friendly (~3M params, 200 steps, a couple of minutes);
+pass --preset 100m for the ~100M-parameter configuration (same code path —
+on real accelerators that's the few-hundred-step deliverable run).
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 200] [--preset small]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.checkpoint import Checkpointer
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.core.policy import SHIFTADD
+from repro.data.pipeline import SyntheticLMData
+from repro.nn.model import LanguageModel
+from repro.train import train_loop
+
+PRESETS = {
+    # ~3M params — CPU demo
+    "small": dict(n_layers=4, d_model=128, n_heads=4, n_kv_heads=2, d_ff=384,
+                  vocab_size=2048),
+    # ~100M params — the deliverable-scale run (accelerator recommended)
+    "100m": dict(n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+                 d_ff=2048, vocab_size=16384),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=PRESETS, default="small")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--policy", choices=["dense", "shiftadd"], default="shiftadd")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = ModelConfig(name=f"lm-{args.preset}", family="dense",
+                      mlp_kind="swiglu", dtype="float32", scan_layers=True,
+                      remat="none", moe_primitives_capacity=2.0,
+                      **PRESETS[args.preset])
+    if args.policy == "shiftadd":
+        cfg = cfg.with_policy(SHIFTADD)
+    tcfg = TrainConfig(learning_rate=3e-3, warmup_steps=20,
+                       total_steps=args.steps, global_batch=args.batch,
+                       seq_len=args.seq, microbatch=2,
+                       checkpoint_every=50, grad_compression="int8_ef")
+    model = LanguageModel(cfg)
+    data = SyntheticLMData(cfg.vocab_size, args.seq, args.batch, seed=0)
+    ckpt = Checkpointer(args.ckpt_dir, keep=2)
+
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(
+        jax.eval_shape(model.init, jax.random.PRNGKey(0))))
+    print(f"training {cfg.name} ({n_params / 1e6:.1f}M params, "
+          f"policy={args.policy}) for {args.steps} steps")
+
+    def hook(m):
+        if m["step"] % 20 == 0:
+            print(f"  step {m['step']:4d}  loss {m['loss']:.4f}  "
+                  f"ce {m['ce']:.4f}  balance {m['balance_loss']:.4f}  "
+                  f"{m['seconds']:.2f}s")
+
+    state, hist = train_loop(model, tcfg, data, checkpointer=ckpt,
+                             metrics_hook=hook)
+    print(f"done: loss {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f}; "
+          f"checkpoints in {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

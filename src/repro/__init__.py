@@ -1,0 +1,9 @@
+"""repro — ShiftAddViT (NeurIPS 2023) as a production multi-pod JAX framework.
+
+The paper's contribution (mixture of multiplication primitives: binary-add
+attention, power-of-two shift linears, heterogeneous mult/shift MoE with a
+latency-aware load-balancing loss) lives in :mod:`repro.core` and is plumbed
+through the model substrate in :mod:`repro.nn` via ``ShiftAddPolicy``.
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,8 @@
+from repro.configs.base import (
+    ModelConfig,
+    MLAConfig,
+    MoEConfig,
+    TrainConfig,
+)
+from repro.configs.registry import get_config, list_archs, ARCHS
+from repro.configs import shapes

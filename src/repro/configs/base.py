@@ -1,0 +1,192 @@
+"""Config dataclasses. One ModelConfig fully determines a model; every
+assigned architecture is a ModelConfig instance in configs/<arch>.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.policy import ShiftAddPolicy
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head latent attention (DeepSeek-V2-style; MiniCPM3 uses this)."""
+
+    q_lora_rank: int = 768
+    kv_lora_rank: int = 256
+    qk_nope_head_dim: int = 64
+    qk_rope_head_dim: int = 32
+    v_head_dim: int = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    """Token-choice top-k MoE (the *architecture's* MoE, e.g. Qwen3 / Phi-3.5;
+    orthogonal to the paper's MoE-of-primitives which lives in the policy)."""
+
+    n_experts: int = 8
+    top_k: int = 2
+    d_expert: int = 768           # per-expert hidden dim
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.001
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | hybrid | ssm | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    d_head: Optional[int] = None   # default d_model // n_heads
+    mlp_kind: str = "swiglu"       # swiglu | geglu | mlp
+    # Block layout. A pattern tuple is tiled over the depth; e.g.
+    # ("rglru", "rglru", "local_attn") is RecurrentGemma's 2:1 layout.
+    block_pattern: Tuple[str, ...] = ("attn",)
+    causal: bool = True
+    window: Optional[int] = None   # sliding window for "local_attn" blocks
+    rope: str = "rope"             # rope | mrope | none
+    rope_theta: float = 10000.0
+    mrope_sections: Tuple[int, ...] = (16, 24, 24)  # Qwen2-VL t/h/w split
+    qk_norm: bool = False
+    attn_logit_softcap: Optional[float] = None
+    mla: Optional[MLAConfig] = None
+    moe: Optional[MoEConfig] = None
+    norm: str = "rmsnorm"          # rmsnorm | layernorm
+    norm_eps: float = 1e-6
+    use_bias: bool = False
+    qkv_bias: bool = False         # Qwen-style bias on q/k/v only
+    tie_embeddings: bool = False
+    parallel_block: bool = False   # GPT-J / Command-R parallel attn+FFN
+    # "tokens": input ids -> embedding table. "embeddings": the modality
+    # frontend is a stub; input_specs() feeds precomputed frame/patch
+    # embeddings of width d_model (assignment rule for [audio]/[vlm]).
+    input_mode: str = "tokens"
+    # RWKV6 head size (d_model must divide).
+    rwkv_head_size: int = 64
+    # Beyond-paper §Perf: chunked (GLA-style) WKV — N/8 sequential steps of
+    # MXU-shaped chunk matmuls instead of N per-token updates (train/prefill).
+    rwkv_chunked: bool = False
+    # RG-LRU recurrent width (RecurrentGemma uses d_rnn = d_model).
+    d_rnn: Optional[int] = None
+    conv1d_width: int = 4
+    # The paper's technique, as a first-class switch.
+    policy: ShiftAddPolicy = ShiftAddPolicy()
+    # Capacity slack of the MoE-of-primitives dispatcher (paper §4.2 TPU
+    # adaptation). Large values ⇒ no token drops (used by equivalence tests).
+    moe_primitives_capacity: float = 1.25
+    # Decode KV-cache storage: "model" (activation dtype) or "int8"
+    # (per-token-per-head scales; halves cache HBM — in the spirit of the
+    # paper's quantized operands, KIVI-style).
+    kv_cache_dtype: str = "model"
+    # Compilation / memory controls.
+    scan_layers: bool = True
+    remat: str = "full"            # none | full | dots_saveable
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+
+    # ------------------------------------------------------------------
+    @property
+    def head_dim(self) -> int:
+        return self.d_head if self.d_head is not None else self.d_model // self.n_heads
+
+    @property
+    def activation_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def weight_dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def is_encoder(self) -> bool:
+        return not self.causal
+
+    def pattern_for_depth(self) -> Tuple[str, ...]:
+        """The per-layer block kinds for the full depth."""
+        p = self.block_pattern
+        reps = -(-self.n_layers // len(p))
+        return (p * reps)[: self.n_layers]
+
+    def with_policy(self, policy: ShiftAddPolicy) -> "ModelConfig":
+        return dataclasses.replace(self, policy=policy)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # Parameter-count estimate (embedding + blocks), used for MODEL_FLOPS.
+    def param_count(self) -> int:
+        d, f, v = self.d_model, self.d_ff, self.vocab_size
+        dh = self.head_dim
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        if self.input_mode == "embeddings":
+            emb = v * d  # output head only
+        total = emb
+        for kind in self.pattern_for_depth():
+            if kind in ("attn", "local_attn"):
+                if self.mla is not None:
+                    m = self.mla
+                    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+                    total += d * m.q_lora_rank + m.q_lora_rank * self.n_heads * qk_head
+                    total += d * (m.kv_lora_rank + m.qk_rope_head_dim)
+                    total += m.kv_lora_rank * self.n_heads * (m.qk_nope_head_dim + m.v_head_dim)
+                    total += self.n_heads * m.v_head_dim * d
+                else:
+                    total += d * dh * (self.n_heads + 2 * self.n_kv_heads) + self.n_heads * dh * d
+            elif kind == "rglru":
+                dr = self.d_rnn or d
+                total += 2 * d * dr + dr * d + 2 * dr * dr // 16  # proj + gates (block-diag/8)
+            elif kind == "rwkv6":
+                total += 6 * d * d  # r,k,v,g,w LoRA-ish + out (estimate; exact
+                # counts come from jax.eval_shape over the real param tree)
+            # MLP / MoE per block:
+            if self.moe is not None:
+                mult = 3 if self.mlp_kind in ("swiglu", "geglu") else 2
+                total += self.moe.n_experts * mult * d * self.moe.d_expert
+                total += self.moe.n_shared_experts * mult * d * self.moe.d_expert
+                total += d * self.moe.n_experts
+            else:
+                mult = 3 if self.mlp_kind in ("swiglu", "geglu") else 2
+                total += mult * d * f
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only routed experts) for 6·N_active·D."""
+        if self.moe is None:
+            return self.param_count()
+        d = self.d_model
+        mult = 3 if self.mlp_kind in ("swiglu", "geglu") else 2
+        per_layer_all = self.moe.n_experts * mult * d * self.moe.d_expert
+        per_layer_active = (self.moe.top_k + self.moe.n_shared_experts) * mult * d * self.moe.d_expert
+        return self.param_count() - self.n_layers * (per_layer_all - per_layer_active)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 1e-5     # paper App. E: finetune base lr
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.05
+    grad_clip_norm: float = 1.0
+    global_batch: int = 256
+    seq_len: int = 4096
+    microbatch: Optional[int] = None   # grad-accumulation chunk (per-step)
+    balance_loss_weight: float = 0.01  # λ for L_IMP + L_LOAD (paper: 0.01)
+    grad_compression: str = "none"     # none | int8_ef (cross-pod reduce)
+    # §Perf lever: cast the param tree to the compute dtype once inside the
+    # loss (before any FSDP all-gather) so collectives move bf16, not f32.
+    cast_params: str = "none"          # none | compute_dtype
+    # §Perf lever: constrain the microbatch gradient accumulator to the
+    # parameter shardings (forces reduce-scatter of dW partials instead of
+    # replicating them over the data axis).
+    constrain_grad_acc: bool = False
+    checkpoint_every: int = 100
+    keep_checkpoints: int = 3
+    seed: int = 0

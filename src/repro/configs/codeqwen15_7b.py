@@ -1,0 +1,27 @@
+"""codeqwen1.5-7b — qwen1.5-arch, full-head KV (GQA kv=32 = MHA), qkv bias
+[hf:Qwen/CodeQwen1.5-7B; hf].
+
+32L d_model=4096 32H (kv=32) d_ff=13440 vocab=92416.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="codeqwen1.5-7b",
+    family="dense",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=13440,
+    vocab_size=92416,
+    d_head=128,
+    mlp_kind="swiglu",
+    rope="rope",
+    rope_theta=1_000_000.0,
+    norm="rmsnorm",
+    qkv_bias=True,
+)
+
+REDUCED = CONFIG.replace(
+    n_layers=4, d_model=128, n_heads=4, n_kv_heads=4, d_head=32,
+    d_ff=256, vocab_size=512, dtype="float32")

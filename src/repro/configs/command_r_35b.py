@@ -1,0 +1,30 @@
+"""command-r-35b — dense GQA, parallel-block, no-bias
+[hf:CohereForAI/c4ai-command-r-v01; unverified].
+
+40L d_model=8192 64H (GQA kv=8) d_ff=22528 vocab=256000.
+Cohere layout: parallel attention+FFN residual, LayerNorm (no bias in
+projections), tied embeddings, 256k vocabulary (the TP-embedding stress case).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="command-r-35b",
+    family="dense",
+    n_layers=40,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=22528,
+    vocab_size=256_000,
+    d_head=128,
+    mlp_kind="swiglu",
+    rope="rope",
+    rope_theta=10_000.0,
+    norm="layernorm",
+    parallel_block=True,
+    tie_embeddings=True,
+)
+
+REDUCED = CONFIG.replace(
+    n_layers=4, d_model=128, n_heads=8, n_kv_heads=2, d_head=16,
+    d_ff=256, vocab_size=512, dtype="float32")

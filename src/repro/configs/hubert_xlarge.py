@@ -1,0 +1,31 @@
+"""hubert-xlarge — encoder-only audio transformer [arXiv:2106.07447; unverified].
+
+48L d_model=1280 16H (kv=16) d_ff=5120 vocab=504 (masked-unit prediction).
+Per the assignment the conv waveform frontend is a STUB: input_specs() feeds
+precomputed frame embeddings (B, T, 1280). Encoder-only ⇒ decode shapes are
+skipped (no decode step). HuBERT's conv positional embedding is part of the
+stubbed frontend; the backbone runs position-free (rope="none").
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge",
+    family="audio",
+    n_layers=48,
+    d_model=1280,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=5120,
+    vocab_size=504,
+    d_head=80,
+    mlp_kind="mlp",
+    causal=False,
+    rope="none",
+    norm="layernorm",
+    use_bias=True,
+    input_mode="embeddings",
+)
+
+REDUCED = CONFIG.replace(
+    n_layers=4, d_model=128, n_heads=4, n_kv_heads=4, d_head=32,
+    d_ff=256, vocab_size=64, dtype="float32")

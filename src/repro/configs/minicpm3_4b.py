@@ -1,0 +1,32 @@
+"""minicpm3-4b — MLA (multi-head latent attention) [hf:openbmb/MiniCPM3-4B; hf].
+
+62L d_model=2560 40H (kv=40) d_ff=6400 vocab=73448. MLA ranks per the HF
+config: q_lora 768, kv_lora 256, qk nope/rope head dims 64/32, v head dim 64.
+Decode caches the *compressed* latent (B, L, 256+32) — the MLA memory win —
+and uses the absorbed-matmul decode form (repro.nn.attention.MLAttention).
+"""
+from repro.configs.base import MLAConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="minicpm3-4b",
+    family="dense",
+    n_layers=62,
+    d_model=2560,
+    n_heads=40,
+    n_kv_heads=40,
+    d_ff=6400,
+    vocab_size=73448,
+    mlp_kind="swiglu",
+    rope="rope",
+    rope_theta=10_000.0,
+    norm="rmsnorm",
+    tie_embeddings=True,
+    mla=MLAConfig(q_lora_rank=768, kv_lora_rank=256,
+                  qk_nope_head_dim=64, qk_rope_head_dim=32, v_head_dim=64),
+)
+
+REDUCED = CONFIG.replace(
+    n_layers=4, d_model=128, n_heads=4, n_kv_heads=4, d_ff=256,
+    vocab_size=512, dtype="float32",
+    mla=MLAConfig(q_lora_rank=48, kv_lora_rank=32,
+                  qk_nope_head_dim=16, qk_rope_head_dim=8, v_head_dim=16))

@@ -1,0 +1,28 @@
+"""phi3.5-moe-42b-a6.6b — 16-expert top-2 MoE
+[hf:microsoft/Phi-3.5-MoE-instruct; hf].
+
+32L d_model=4096 32H (GQA kv=8) per-expert d_ff=6400 vocab=32064.
+"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="phi3.5-moe-42b-a6.6b",
+    family="moe",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=6400,
+    vocab_size=32064,
+    d_head=128,
+    mlp_kind="swiglu",
+    rope="rope",
+    rope_theta=10_000.0,
+    norm="layernorm",
+    moe=MoEConfig(n_experts=16, top_k=2, d_expert=6400, n_shared_experts=0),
+)
+
+REDUCED = CONFIG.replace(
+    n_layers=4, d_model=128, n_heads=4, n_kv_heads=2, d_head=32,
+    d_ff=128, vocab_size=512, dtype="float32",
+    moe=MoEConfig(n_experts=4, top_k=2, d_expert=128))

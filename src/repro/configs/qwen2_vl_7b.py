@@ -1,0 +1,32 @@
+"""qwen2-vl-7b — VLM backbone with M-RoPE [arXiv:2409.12191; hf].
+
+28L d_model=3584 28H (GQA kv=4) d_ff=18944 vocab=152064.
+Per the assignment the vision frontend is a STUB: input_specs() feeds
+precomputed patch embeddings (B, N, d_model) with (t, h, w) M-RoPE position
+ids; only the transformer backbone is modeled. Sections 16/24/24 over the
+64 frequency pairs of head_dim 128.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-7b",
+    family="vlm",
+    n_layers=28,
+    d_model=3584,
+    n_heads=28,
+    n_kv_heads=4,
+    d_ff=18944,
+    vocab_size=152_064,
+    d_head=128,
+    mlp_kind="swiglu",
+    rope="mrope",
+    mrope_sections=(16, 24, 24),
+    rope_theta=1_000_000.0,
+    norm="rmsnorm",
+    qkv_bias=True,
+    input_mode="embeddings",
+)
+
+REDUCED = CONFIG.replace(
+    n_layers=4, d_model=128, n_heads=4, n_kv_heads=2, d_head=32,
+    d_ff=256, vocab_size=512, mrope_sections=(4, 6, 6), dtype="float32")

@@ -1,0 +1,30 @@
+"""qwen3-moe-30b-a3b — 128-expert top-8 MoE with QK-norm
+[hf:Qwen/Qwen3-30B-A3B; hf].
+
+48L d_model=2048 32H (GQA kv=4) per-expert d_ff=768 vocab=151936,
+head_dim 128 (decoupled from d_model: q proj 2048→4096).
+"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-30b-a3b",
+    family="moe",
+    n_layers=48,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=4,
+    d_ff=768,
+    vocab_size=151_936,
+    d_head=128,
+    mlp_kind="swiglu",
+    rope="rope",
+    rope_theta=1_000_000.0,
+    norm="rmsnorm",
+    qk_norm=True,
+    moe=MoEConfig(n_experts=128, top_k=8, d_expert=768, n_shared_experts=0),
+)
+
+REDUCED = CONFIG.replace(
+    n_layers=4, d_model=128, n_heads=4, n_kv_heads=2, d_head=32,
+    d_ff=64, vocab_size=512, dtype="float32",
+    moe=MoEConfig(n_experts=8, top_k=2, d_expert=64))

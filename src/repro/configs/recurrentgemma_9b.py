@@ -1,0 +1,34 @@
+"""recurrentgemma-9b — hybrid RG-LRU + local attention, 1:2 pattern
+[arXiv:2402.19427; unverified].
+
+38L d_model=4096 16H (GQA kv=1 = MQA) d_ff=12288 vocab=256000.
+Griffin layout: (recurrent, recurrent, local-attn) tiled; window 2048;
+GeGLU MLPs; d_rnn = d_model; temporal conv width 4. 38 = 12 cycles + 2
+remainder recurrent blocks.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    n_layers=38,
+    d_model=4096,
+    n_heads=16,
+    n_kv_heads=1,
+    d_ff=12288,
+    vocab_size=256_000,
+    d_head=256,
+    mlp_kind="geglu",
+    block_pattern=("rglru", "rglru", "local_attn"),
+    window=2048,
+    rope="rope",
+    rope_theta=10_000.0,
+    norm="rmsnorm",
+    d_rnn=4096,
+    conv1d_width=4,
+    tie_embeddings=True,
+)
+
+REDUCED = CONFIG.replace(
+    n_layers=5, d_model=128, n_heads=4, n_kv_heads=1, d_head=32,
+    d_ff=256, vocab_size=512, window=8, d_rnn=128, dtype="float32")

@@ -1,0 +1,53 @@
+"""--arch registry: every assigned architecture + the paper's own ViT configs."""
+from __future__ import annotations
+
+from repro.configs import (
+    codeqwen15_7b,
+    command_r_35b,
+    hubert_xlarge,
+    minicpm3_4b,
+    phi35_moe_42b,
+    qwen2_vl_7b,
+    qwen3_moe_30b_a3b,
+    recurrentgemma_9b,
+    rwkv6_3b,
+    yi_9b,
+)
+from repro.core import policy as policies
+
+ARCHS = {
+    "yi-9b": yi_9b,
+    "command-r-35b": command_r_35b,
+    "codeqwen1.5-7b": codeqwen15_7b,
+    "minicpm3-4b": minicpm3_4b,
+    "recurrentgemma-9b": recurrentgemma_9b,
+    "qwen3-moe-30b-a3b": qwen3_moe_30b_a3b,
+    "phi3.5-moe-42b-a6.6b": phi35_moe_42b,
+    "qwen2-vl-7b": qwen2_vl_7b,
+    "hubert-xlarge": hubert_xlarge,
+    "rwkv6-3b": rwkv6_3b,
+}
+
+POLICIES = {
+    "dense": policies.DENSE,
+    "shiftadd": policies.SHIFTADD,
+    "shiftadd_deploy": policies.SHIFTADD_DEPLOY,
+    "stage1": policies.STAGE1,
+    "all_shift": policies.ALL_SHIFT,
+}
+
+
+def list_archs():
+    return sorted(ARCHS.keys())
+
+
+def get_config(arch: str, policy: str | None = None, reduced: bool = False):
+    """Look up an architecture config; optionally reduced (smoke-test scale)
+    and/or re-policied (the paper's reparameterization switch)."""
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {list_archs()}")
+    mod = ARCHS[arch]
+    cfg = mod.REDUCED if reduced else mod.CONFIG
+    if policy is not None:
+        cfg = cfg.with_policy(POLICIES[policy] if isinstance(policy, str) else policy)
+    return cfg

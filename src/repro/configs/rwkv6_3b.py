@@ -1,0 +1,29 @@
+"""rwkv6-3b — "Finch": attention-free, data-dependent decay
+[arXiv:2404.05892; hf].
+
+32L d_model=2560 (attn-free) d_ff=8960 vocab=65536; head size 64 (40 heads).
+DESIGN.md §Arch-applicability: the paper's attention reparameterization is
+inapplicable (the WKV recurrence is already an additive linear-attention
+form); shift / MoE-of-primitives apply to all projections and the channel mix.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-3b",
+    family="ssm",
+    n_layers=32,
+    d_model=2560,
+    n_heads=40,           # d_model / rwkv_head_size
+    n_kv_heads=40,
+    d_ff=8960,
+    vocab_size=65536,
+    mlp_kind="mlp",       # channel-mix is used instead (block kind rwkv6)
+    block_pattern=("rwkv6",),
+    rope="none",
+    norm="layernorm",
+    rwkv_head_size=64,
+)
+
+REDUCED = CONFIG.replace(
+    n_layers=4, d_model=128, n_heads=2, n_kv_heads=2, d_ff=256,
+    vocab_size=512, rwkv_head_size=64, dtype="float32")

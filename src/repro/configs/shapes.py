@@ -1,0 +1,106 @@
+"""The assigned input-shape grid and ShapeDtypeStruct input specs per cell.
+
+Shapes (LM-family, seq_len × global_batch):
+  train_4k     4,096 × 256   → lowers train_step
+  prefill_32k  32,768 × 32   → lowers prefill_step (full forward, no grads)
+  decode_32k   32,768 × 128  → lowers serve_step (1 new token, 32k cache)
+  long_500k    524,288 × 1   → lowers serve_step (sub-quadratic state only)
+
+Cell rules (DESIGN.md §5):
+- encoder-only archs (hubert) skip decode shapes;
+- `long_500k` requires sub-quadratic attention: native for ssm/hybrid; for
+  pure-attention archs the cell runs under the ShiftAdd binary-linear policy
+  (O(1) recurrent state) — the paper's technique is what makes it feasible.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import SHIFTADD
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class CellPlan:
+    arch: str
+    shape: ShapeSpec
+    skip: bool = False
+    reason: str = ""
+    # Policy the cell is lowered under (None = the config's own policy).
+    policy_override: Optional[object] = None
+
+
+def plan_cell(cfg, shape_name: str) -> CellPlan:
+    shape = SHAPES[shape_name]
+    if cfg.is_encoder and shape.kind == "decode":
+        return CellPlan(cfg.name, shape, skip=True,
+                        reason="encoder-only arch has no decode step")
+    if shape.name == "long_500k":
+        sub_quadratic = (
+            cfg.family in ("ssm", "hybrid")
+            or cfg.policy.attention in ("linear", "binary_linear"))
+        if not sub_quadratic:
+            # Paper's technique makes the cell feasible: O(1) linear-attn state.
+            return CellPlan(cfg.name, shape, policy_override=SHIFTADD)
+    return CellPlan(cfg.name, shape)
+
+
+def all_cells(cfg):
+    return {name: plan_cell(cfg, name) for name in SHAPES}
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct stand-ins (no allocation) for every step function input
+# ---------------------------------------------------------------------------
+
+def _positions_spec(cfg, batch, seq):
+    if cfg.rope == "mrope":
+        return jax.ShapeDtypeStruct((batch, 3, seq), jnp.int32)
+    return jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+
+
+def input_specs(cfg, shape_name: str):
+    """Stand-in inputs for the step function of this cell.
+
+    train/prefill: {"inputs", "labels", "positions"}.
+    decode: {"inputs_t"} — the persistent cache/state is created inside the
+    serve_step donor (see launch.dryrun) from cfg + shape.
+    """
+    shape = SHAPES[shape_name]
+    b, n = shape.global_batch, shape.seq_len
+    dt = cfg.activation_dtype
+    if shape.kind in ("train", "prefill"):
+        if cfg.input_mode == "tokens":
+            inputs = jax.ShapeDtypeStruct((b, n), jnp.int32)
+        else:
+            inputs = jax.ShapeDtypeStruct((b, n, cfg.d_model), dt)
+        return {
+            "inputs": inputs,
+            "labels": jax.ShapeDtypeStruct((b, n), jnp.int32),
+            "positions": _positions_spec(cfg, b, n),
+        }
+    # decode: one new token; cache covers seq_len history.
+    if cfg.input_mode == "tokens":
+        inputs_t = jax.ShapeDtypeStruct((b,), jnp.int32)
+    else:
+        inputs_t = jax.ShapeDtypeStruct((b, cfg.d_model), dt)
+    return {"inputs_t": inputs_t}

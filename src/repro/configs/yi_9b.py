@@ -1,0 +1,25 @@
+"""yi-9b — dense llama-arch GQA [arXiv:2403.04652; hf].
+
+48L d_model=4096 32H (GQA kv=4) d_ff=11008 vocab=64000.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="yi-9b",
+    family="dense",
+    n_layers=48,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=4,
+    d_ff=11008,
+    vocab_size=64000,
+    d_head=128,
+    mlp_kind="swiglu",
+    rope="rope",
+    rope_theta=5_000_000.0,   # Yi long-context base
+    norm="rmsnorm",
+)
+
+REDUCED = CONFIG.replace(
+    n_layers=4, d_model=128, n_heads=4, n_kv_heads=2, d_head=32,
+    d_ff=256, vocab_size=512, dtype="float32")

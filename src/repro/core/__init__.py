@@ -1,0 +1,30 @@
+"""The paper's primary contribution: mixture of multiplication primitives.
+
+- :mod:`repro.core.quant` — STE binary / power-of-two quantizers + int8 packing
+- :mod:`repro.core.shift_linear` — ``W = s * 2^P`` shift-reparameterized linear
+- :mod:`repro.core.add_attention` — binary-code (Hamming) linear attention, Q(KᵀV)
+- :mod:`repro.core.moe_primitives` — heterogeneous {Mult, Shift} token-routed MoE
+- :mod:`repro.core.losses` — latency-aware load-balancing loss (SCV importance + load)
+- :mod:`repro.core.reparam` — two-stage dense→ShiftAdd checkpoint conversion
+- :mod:`repro.core.energy` — analytic 45nm op/data-movement energy model (paper Tab. 1)
+- :mod:`repro.core.policy` — ShiftAddPolicy: per-component reparameterization switch
+"""
+
+from repro.core.policy import ShiftAddPolicy
+from repro.core.quant import (
+    ste,
+    binarize_ste,
+    po2_quantize_ste,
+    pack_po2,
+    unpack_po2,
+    po2_weight_from_packed,
+)
+from repro.core.losses import (
+    squared_coeff_variation,
+    importance_loss,
+    load_loss,
+    latency_aware_moe_loss,
+)
+from repro.core.shift_linear import ShiftLinear
+from repro.core.add_attention import binary_linear_attention, BinaryLinearAttention
+from repro.core.moe_primitives import MoEPrimitives

@@ -1,0 +1,37 @@
+"""Plain dense linear — the `Mult.` primitive (and the substrate default).
+
+Kept in `core` so the heterogeneous MoE can pair it against ShiftLinear without
+import cycles; `repro.nn` re-exports it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+class Dense:
+    """y = x @ W + b, with truncated-normal init scaled by fan-in."""
+
+    def __init__(self, in_features, out_features, use_bias=True,
+                 dtype=jnp.float32, param_dtype=jnp.float32, name="dense"):
+        self.in_features = int(in_features)
+        self.out_features = int(out_features)
+        self.use_bias = use_bias
+        self.dtype = dtype
+        self.param_dtype = param_dtype
+        self.name = name
+
+    def init(self, key):
+        std = self.in_features ** -0.5
+        w = std * jax.random.truncated_normal(
+            key, -2.0, 2.0, (self.in_features, self.out_features), jnp.float32)
+        params = {"kernel": w.astype(self.param_dtype)}
+        if self.use_bias:
+            params["bias"] = jnp.zeros((self.out_features,), self.param_dtype)
+        return params
+
+    def __call__(self, params, x):
+        y = jnp.dot(x.astype(self.dtype), params["kernel"].astype(self.dtype))
+        if self.use_bias:
+            y = y + params["bias"].astype(self.dtype)
+        return y

@@ -1,0 +1,125 @@
+"""Analytic energy / latency model (paper Tab. 1 + Eyeriss-style data movement).
+
+Two cost views, never conflated (DESIGN.md §2):
+
+1. **ShiftAdd-ASIC energy view** — unit energies from the paper's Tab. 1
+   (45 nm CMOS) plus Horowitz ISSCC'14-style data-movement costs. This is what
+   reproduces the paper's energy tables (Tab. 3, Fig. 3).
+2. **Stock-TPU roofline view** — v5e peak numbers used by the §Roofline terms
+   and by the latency-aware MoE coefficients α_i.
+
+All energies in pJ, times in seconds, sizes in bytes.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+# ---------------------------------------------------------------------------
+# TPU v5e roofline constants (single source of truth; roofline.py imports these)
+# ---------------------------------------------------------------------------
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s per chip
+PEAK_OPS_INT8 = 394e12        # int8 MXU ops/s per chip (2x bf16)
+HBM_BW = 819e9                # B/s per chip
+ICI_BW = 50e9                 # B/s per link (~50 GB/s)
+HBM_PER_CHIP = 16 * 1024**3   # 16 GiB
+
+# ---------------------------------------------------------------------------
+# Paper Tab. 1 — unit energy (pJ) per op, 45 nm CMOS
+# ---------------------------------------------------------------------------
+MULT_PJ = {"fp32": 3.7, "fp16": 0.9, "int32": 3.1, "int8": 0.2}
+ADD_PJ = {"fp32": 1.1, "fp16": 0.4, "int32": 0.1, "int8": 0.03}
+SHIFT_PJ = {"int32": 0.13, "int16": 0.057, "int8": 0.024}
+
+# Horowitz ISSCC'14: DRAM ≈ 640 pJ / 32-bit word; on-chip SRAM ≈ 5 pJ / 32-bit.
+DRAM_PJ_PER_BYTE = 160.0
+SRAM_PJ_PER_BYTE = 1.25
+
+_BYTES = {"fp32": 4, "fp16": 2, "bf16": 2, "int32": 4, "int16": 2, "int8": 1}
+
+
+@dataclasses.dataclass
+class OpEnergy:
+    """Energy breakdown of one logical op (a matmul-shaped contraction)."""
+
+    compute_pj: float
+    dram_pj: float
+
+    @property
+    def total_pj(self) -> float:
+        return self.compute_pj + self.dram_pj
+
+    def __add__(self, other: "OpEnergy") -> "OpEnergy":
+        return OpEnergy(self.compute_pj + other.compute_pj, self.dram_pj + other.dram_pj)
+
+
+def _movement_pj(m, k, n, a_bytes, b_bytes, o_bytes):
+    """One-pass DRAM traffic model: read A (m,k), read B (k,n), write O (m,n)."""
+    return DRAM_PJ_PER_BYTE * (m * k * a_bytes + k * n * b_bytes + m * n * o_bytes)
+
+
+def matmul_energy(m, k, n, dtype="fp16") -> OpEnergy:
+    """Dense MatMul / Linear: m*k*n MACs (mult + add each)."""
+    macs = m * k * n
+    compute = macs * (MULT_PJ[dtype if dtype != "bf16" else "fp16"]
+                      + ADD_PJ[dtype if dtype != "bf16" else "fp16"])
+    b = _BYTES[dtype]
+    return OpEnergy(compute, _movement_pj(m, k, n, b, b, b))
+
+
+def add_matmul_energy(m, k, n, acc_dtype="int32") -> OpEnergy:
+    """Paper's Add layer: one operand binarized ⇒ accumulation only.
+
+    m*k*n additions at the accumulator dtype; binary operand moves 1 B/element
+    (int8 storage; the bit-packed variant would be k*n/8).
+    """
+    compute = m * k * n * ADD_PJ[acc_dtype]
+    return OpEnergy(compute, _movement_pj(m, k, n, _BYTES["fp16"], _BYTES["int8"], _BYTES["fp16"]))
+
+
+def shift_matmul_energy(m, k, n, dtype="int8") -> OpEnergy:
+    """Paper's Shift layer: weights are s*2^P ⇒ per-MAC a shift + an add.
+
+    Weights move 1 packed byte/element; activations int/fp16.
+    """
+    macs = m * k * n
+    compute = macs * (SHIFT_PJ[dtype] + ADD_PJ["int32"])
+    return OpEnergy(compute, _movement_pj(m, k, n, _BYTES["fp16"], _BYTES["int8"], _BYTES["fp16"]))
+
+
+# ---------------------------------------------------------------------------
+# Latency model for expert coefficients α_i and the dispatcher capacities.
+# Roofline max(compute, memory) on the stock-TPU view.
+# ---------------------------------------------------------------------------
+
+def linear_latency_estimate(tokens: int, d_in: int, d_out: int, kind: str) -> float:
+    """Seconds to run a `tokens x d_in @ d_in x d_out` linear of a given kind.
+
+    kind: "mult" (bf16 dense) | "shift" (packed-int8 weights) | "add" (binary operand).
+    The *relative* values are what matter for α_i; they encode exactly the
+    paper's observation that Shift's win is data movement.
+    """
+    flops = 2.0 * tokens * d_in * d_out
+    if kind == "mult":
+        w_bytes = d_in * d_out * 2
+        t_c = flops / PEAK_FLOPS_BF16
+    elif kind == "shift":
+        w_bytes = d_in * d_out * 1           # packed int8
+        t_c = flops / PEAK_OPS_INT8          # int8 MXU path
+    elif kind == "add":
+        w_bytes = d_in * d_out * 1
+        t_c = flops / PEAK_OPS_INT8
+    else:
+        raise ValueError(kind)
+    act_bytes = tokens * (d_in + d_out) * 2
+    t_m = (w_bytes + act_bytes) / HBM_BW
+    return max(t_c, t_m)
+
+
+def mlp_latency_estimate(tokens: int, d_model: int, d_hidden: int, kind: str) -> float:
+    """Two-linear MLP expert latency (the paper's MoE experts)."""
+    return (linear_latency_estimate(tokens, d_model, d_hidden, kind)
+            + linear_latency_estimate(tokens, d_hidden, d_model, kind))
+
+
+def expert_latencies(tokens: int, d_model: int, d_hidden: int, kinds) -> list:
+    return [mlp_latency_estimate(tokens, d_model, d_hidden, k) for k in kinds]

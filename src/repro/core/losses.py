@@ -1,0 +1,80 @@
+"""Latency-aware load-balancing loss (paper §4.2, Eq. 4).
+
+    L_IMP  = SCV({ α_i · Σ_x p_i(x) })          (importance: gate mass)
+    L_LOAD = SCV({ α_i · Σ_x q_i(x) })          (load: top-1 assignment prob)
+    α_i    = Lat_i / Σ_j Lat_j                  (latency-aware coefficients)
+
+SCV is the squared coefficient of variation. q_i(x) is the *smooth* probability
+that expert i wins the (noisy) top-1, following Shazeer et al. '17 [48] — a
+normal-CDF proxy that keeps the load term differentiable.
+
+Minimizing SCV(α_i · load_i) drives load_i ∝ 1/α_i ∝ 1/Lat_i: faster experts
+receive more tokens, which is exactly the paper's synchronization argument —
+parallel experts finish at the same time.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def squared_coeff_variation(x, eps=1e-9):
+    """SCV(x) = Var(x) / Mean(x)^2 over the expert axis (last)."""
+    mean = jnp.mean(x, axis=-1)
+    var = jnp.var(x, axis=-1)
+    return var / (jnp.square(mean) + eps)
+
+
+def latency_coefficients(latencies):
+    """α_i = Lat_i / Σ_j Lat_j  (paper's definition)."""
+    lat = jnp.asarray(latencies, jnp.float32)
+    return lat / jnp.sum(lat)
+
+
+def importance_loss(probs, alpha):
+    """L_IMP. probs: (..., tokens, experts) router softmax; alpha: (experts,)."""
+    importance = jnp.sum(probs, axis=-2)  # (..., experts)
+    return jnp.mean(squared_coeff_variation(importance * alpha))
+
+
+def _normal_cdf(x):
+    return 0.5 * (1.0 + jax.lax.erf(x / jnp.sqrt(2.0)))
+
+
+def smooth_top1_prob(clean_logits, noise_std=1.0):
+    """q_i(x) = P(p_i + ε ≥ p_j + ε_j, ∀ j ≠ i) — smooth noisy-top-1 proxy [48].
+
+    Uses the normal-CDF of the margin between expert i's logit and the max of
+    the *other* experts' logits. Differentiable everywhere.
+    """
+    top = jnp.max(clean_logits, axis=-1, keepdims=True)
+    # For the argmax expert the relevant margin is vs the runner-up. (Computed
+    # by masking out the argmax rather than sorting — sort's gradient is
+    # broken on this jaxlib and a masked max is cheaper anyway.)
+    arg = jnp.argmax(clean_logits, axis=-1)
+    top_oh = jax.nn.one_hot(arg, clean_logits.shape[-1], dtype=bool)
+    second = jnp.max(jnp.where(top_oh, -jnp.inf, clean_logits), axis=-1, keepdims=True)
+    is_top = clean_logits >= top
+    margin = jnp.where(is_top, clean_logits - second, clean_logits - top)
+    # Harden against upstream divergence: inf logits give inf-inf = NaN
+    # margins; the CDF saturates beyond ~±6σ anyway.
+    margin = jnp.clip(jnp.nan_to_num(margin, posinf=30.0, neginf=-30.0),
+                      -30.0, 30.0)
+    return _normal_cdf(margin / jnp.maximum(noise_std, 1e-6))
+
+
+def load_loss(clean_logits, alpha, noise_std=1.0):
+    """L_LOAD with the smooth load estimator."""
+    q = smooth_top1_prob(clean_logits, noise_std)  # (..., tokens, experts)
+    load = jnp.sum(q, axis=-2)
+    return jnp.mean(squared_coeff_variation(load * alpha))
+
+
+def latency_aware_moe_loss(router_logits, probs, latencies, noise_std=1.0):
+    """λ-free combined MoE aux loss: L_IMP + L_LOAD (caller applies λ).
+
+    router_logits / probs: (..., tokens, experts); latencies: per-expert
+    latency estimates (seconds or any consistent unit).
+    """
+    alpha = latency_coefficients(latencies)
+    return importance_loss(probs, alpha) + load_loss(router_logits, alpha, noise_std)

@@ -1,0 +1,214 @@
+"""Heterogeneous mixture of multiplication primitives (paper §4.2).
+
+Experts are *unequal*: a powerful `Mult.` expert (dense linears) and a cheap
+`Shift` expert (power-of-two linears). A learned router sends each token to
+its top-1 expert; the latency-aware load-balancing loss (core.losses) trains
+the router so the token split matches the experts' speed ratio.
+
+TPU adaptation of the paper's TVM/Nimble dynamic dispatch (DESIGN.md §2):
+**static capacity dispatch** (GShard/Switch one-hot einsums) with
+**latency-aware capacities** — expert i's capacity ∝ 1/Lat_i, the static-shape
+twin of the LL-loss objective. Experts run as independent sharded branches, so
+the paper's "ideal parallelism" (modularized latency = max over experts) is
+the native execution model under SPMD, not a simulation.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import energy, losses
+from repro.core.dense import Dense
+from repro.core.shift_linear import ShiftLinear
+
+
+def _act(name):
+    return {"gelu": jax.nn.gelu, "silu": jax.nn.silu, "relu": jax.nn.relu}[name]
+
+
+class _MLPExpert:
+    """Two-linear expert of a given primitive kind ("mult" | "shift")."""
+
+    def __init__(self, d_model, d_hidden, kind, activation="gelu",
+                 dtype=jnp.float32, param_dtype=jnp.float32):
+        linear = Dense if kind == "mult" else ShiftLinear
+        self.kind = kind
+        self.up = linear(d_model, d_hidden, dtype=dtype, param_dtype=param_dtype)
+        self.down = linear(d_hidden, d_model, dtype=dtype, param_dtype=param_dtype)
+        self.activation = _act(activation)
+
+    def init(self, key):
+        k1, k2 = jax.random.split(key)
+        return {"up": self.up.init(k1), "down": self.down.init(k2)}
+
+    def spec(self, params):
+        def lin(p, axes):
+            return {k: (axes if k != "bias" else (axes[-1],)) for k in p}
+        return {"up": lin(params["up"], ("embed", "mlp")),
+                "down": lin(params["down"], ("mlp", "embed"))}
+
+    def __call__(self, params, x):
+        return self.down(params["down"], self.activation(self.up(params["up"], x)))
+
+
+class _LinearExpert:
+    """Single-linear expert — for MoE applied to attention projections ("Both")."""
+
+    def __init__(self, d_in, d_out, kind, dtype=jnp.float32, param_dtype=jnp.float32):
+        linear = Dense if kind == "mult" else ShiftLinear
+        self.kind = kind
+        self.proj = linear(d_in, d_out, dtype=dtype, param_dtype=param_dtype)
+
+    def init(self, key):
+        return {"proj": self.proj.init(key)}
+
+    def spec(self, params):
+        return {"proj": {k: (("embed", "mlp") if k != "bias" else ("mlp",))
+                         for k in params["proj"]}}
+
+    def __call__(self, params, x):
+        return self.proj(params["proj"], x)
+
+
+class MoEPrimitives:
+    """Token-routed mixture of {Mult, Shift} experts with latency-aware dispatch.
+
+    Args:
+      d_model: token dim.
+      d_hidden: expert hidden dim (expert_type="mlp") or output dim ("linear").
+      expert_kinds: e.g. ("mult", "shift") — the paper's pairing. Any number
+        and mix of kinds is supported (the paper notes more unbalanced experts
+        ⇒ larger LL-loss wins).
+      capacity_factor: slack multiplier on the latency-proportional capacities.
+      latency_aware: if False, capacities are uniform and α_i = 1/n (ablation
+        arm of paper Tab. 7).
+    """
+
+    def __init__(self, d_model, d_hidden, expert_kinds=("mult", "shift"),
+                 expert_type="mlp", activation="gelu", capacity_factor=1.25,
+                 latency_aware=True, router_noise=1.0,
+                 dtype=jnp.float32, param_dtype=jnp.float32, name="moe",
+                 experts=None, latencies=None):
+        """If `experts` (list of init/apply modules) is given it overrides the
+        built-in expert construction — used by repro.nn to pair the
+        architecture's own MLP flavor (SwiGLU, channel-mix, ...) as the Mult
+        expert against its Shift twin. `latencies` must then be supplied (or
+        is estimated from the default MLP shape)."""
+        self.d_model = int(d_model)
+        self.d_hidden = int(d_hidden)
+        self.expert_kinds = tuple(expert_kinds)
+        self.n_experts = len(experts) if experts is not None else len(self.expert_kinds)
+        self.capacity_factor = float(capacity_factor)
+        self.latency_aware = latency_aware
+        self.router_noise = router_noise
+        self.dtype = dtype
+        self.name = name
+        self.router = Dense(d_model, self.n_experts, use_bias=False,
+                            dtype=jnp.float32, param_dtype=jnp.float32)
+        if experts is not None:
+            self.experts = list(experts)
+        elif expert_type == "mlp":
+            self.experts = [
+                _MLPExpert(d_model, d_hidden, kind, activation, dtype, param_dtype)
+                for kind in self.expert_kinds
+            ]
+        else:
+            self.experts = [
+                _LinearExpert(d_model, d_hidden, kind, dtype, param_dtype)
+                for kind in self.expert_kinds
+            ]
+        # Analytic per-token latency of each expert on the target hardware —
+        # used for α_i (LL-loss) and the static capacity split. Nominal token
+        # count only sets the compute/memory-bound regime; ratios are stable.
+        if latencies is not None:
+            self.latencies = list(latencies)
+        else:
+            self.latencies = energy.expert_latencies(
+                1024, d_model, d_hidden, self.expert_kinds)
+
+    # -- parameters ---------------------------------------------------------
+    def init(self, key):
+        keys = jax.random.split(key, self.n_experts + 1)
+        return {
+            "router": self.router.init(keys[0]),
+            "experts": [e.init(k) for e, k in zip(self.experts, keys[1:])],
+        }
+
+    def spec(self, params):
+        return {
+            "router": {k: ("embed", None) for k in params["router"]},
+            "experts": [e.spec(p) for e, p in zip(self.experts, params["experts"])],
+        }
+
+    # -- capacity schedule ---------------------------------------------------
+    def capacities(self, n_tokens: int):
+        """Static per-expert capacities; latency-aware split sends more tokens
+        to faster experts (inverse-latency weights)."""
+        if self.latency_aware:
+            inv = [1.0 / l for l in self.latencies]
+            weights = [w / sum(inv) for w in inv]
+        else:
+            weights = [1.0 / self.n_experts] * self.n_experts
+        caps = [int(math.ceil(self.capacity_factor * n_tokens * w)) for w in weights]
+        return [min(c, n_tokens) for c in caps]
+
+    # -- forward ------------------------------------------------------------
+    def __call__(self, params, x, train=True, rng=None):
+        """x: (..., d_model). Tokens are routed in sharded groups
+        (repro.nn.dispatch) with latency-aware per-expert capacities.
+
+        Returns (y, aux) where aux carries the LL-loss ingredients and
+        dispatch statistics (paper Fig. 6 visualizations read these).
+        """
+        from repro.nn.dispatch import combine, dispatch, group_tokens
+
+        xg, ungroup = group_tokens(x, self.d_model)
+        g, s, _ = xg.shape
+
+        clean_logits = self.router(params["router"], xg.astype(jnp.float32))
+        if train and rng is not None and self.router_noise > 0:
+            noisy = clean_logits + self.router_noise * jax.random.normal(
+                rng, clean_logits.shape)
+        else:
+            noisy = clean_logits
+        probs = jax.nn.softmax(clean_logits, axis=-1)
+        top1 = jnp.argmax(noisy, axis=-1)                        # (G,S)
+        gate = jnp.take_along_axis(probs, top1[..., None], axis=-1)
+
+        caps = self.capacities(s)                                 # per group
+        buf, daux = dispatch(xg.astype(self.dtype), top1[..., None],
+                              gate.astype(jnp.float32), caps)
+
+        # Heterogeneous experts: each owns a static row segment of the buffer
+        # and runs as an independent branch — parallel under SPMD, which is
+        # the paper's "ideal parallelism" natively (DESIGN.md §2).
+        outs = []
+        off = 0
+        for i, expert in enumerate(self.experts):
+            seg = buf[:, off:off + caps[i], :]
+            outs.append(expert(params["experts"][i], seg))
+            off += caps[i]
+        expert_out = jnp.concatenate(outs, axis=1)               # (G, total, d)
+
+        y = ungroup(combine(expert_out, daux, s, self.d_model)).astype(x.dtype)
+
+        # latency_aware=False is the paper's baseline arm (Tab. 7 ablation):
+        # homogeneous treatment — uniform α — rather than no balance at all.
+        loss_lat = (jnp.asarray(self.latencies) if self.latency_aware
+                    else jnp.ones((self.n_experts,)))
+        alpha = losses.latency_coefficients(loss_lat)
+        balance = losses.latency_aware_moe_loss(
+            clean_logits, probs, loss_lat, self.router_noise)
+        aux = {
+            "balance_loss": balance,
+            "probs": probs.reshape(g * s, self.n_experts),
+            "logits": clean_logits.reshape(g * s, self.n_experts),
+            "top1": top1.reshape(g * s),
+            "tokens_per_expert": daux["tokens_per_expert"],
+            "drop_fraction": daux["drop_fraction"],
+            "alpha": alpha,
+            "capacities": jnp.asarray(caps, jnp.int32),
+        }
+        return y, aux

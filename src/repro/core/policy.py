@@ -1,0 +1,89 @@
+"""ShiftAddPolicy — which components of a model are reparameterized, and how.
+
+This is the paper's contribution exposed as a first-class framework feature:
+every architecture config carries a policy; model builders, the reparam
+converter, the dry-run and the serving path all consume it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ShiftAddPolicy:
+    """Per-component reparameterization policy (paper §4).
+
+    attention:
+      - "dense": original softmax attention (MSA / GQA / MLA ...).
+      - "linear": linear attention, Q(KᵀV) order (paper stage-1a).
+      - "binary_linear": linear attention with Q/K mapped to binary codes in
+        Hamming space — MatMuls become additions (paper stage-1b, the `Add` layer).
+    projections:
+      - "dense": q/k/v/o projections stay multiplications.
+      - "shift": q/k/v/o projections become `s * 2^P` shift layers.
+    mlp:
+      - "dense": original MLP.
+      - "shift": all MLP linears become shift layers (paper shows accuracy drop).
+      - "moe_primitives": the paper's heterogeneous MoE — each token routed to a
+        Mult expert or a Shift expert (paper stage-2, §4.2).
+    """
+
+    attention: str = "dense"
+    projections: str = "dense"
+    mlp: str = "dense"
+    # Expert kinds for the heterogeneous MoE, fastest-last not required; latency
+    # coefficients are derived analytically per expert (core.energy).
+    moe_experts: Tuple[str, ...] = ("mult", "shift")
+    # Train router with the latency-aware LL-loss and use latency-aware
+    # capacities at dispatch time.
+    latency_aware: bool = True
+    # λ in  L = L_CLS + λ (L_IMP + L_LOAD); paper uses 0.01 everywhere.
+    balance_loss_weight: float = 0.01
+    # Parallel DWConv on the V branch of linear attention (paper Fig. 1b).
+    dwconv_v: bool = True
+    # Deployment mode: shift weights stored packed int8 (1 B/weight) instead
+    # of trainable fp32 latents — the serving format (paper App. A: the win
+    # is data movement). Train with deploy=False, freeze, serve deploy=True.
+    deploy: bool = False
+
+    def proj_linear(self) -> str:
+        if self.projections == "dense":
+            return "dense"
+        return "shift_packed" if self.deploy else "shift"
+
+    def mlp_linear(self) -> str:
+        if self.mlp == "dense":
+            return "dense"
+        return "shift_packed" if self.deploy else "shift"
+
+    def __post_init__(self):
+        assert self.attention in ("dense", "linear", "binary_linear"), self.attention
+        assert self.projections in ("dense", "shift"), self.projections
+        assert self.mlp in ("dense", "shift", "moe_primitives"), self.mlp
+        for e in self.moe_experts:
+            assert e in ("mult", "shift"), e
+
+    @property
+    def is_dense(self) -> bool:
+        return (
+            self.attention == "dense"
+            and self.projections == "dense"
+            and self.mlp == "dense"
+        )
+
+
+# Canonical policies used throughout tests / benchmarks / dry-run.
+DENSE = ShiftAddPolicy()
+# Paper's full recipe (Tab. 4 bottom rows: LA + Quant-Add + MoE(Both)).
+SHIFTADD = ShiftAddPolicy(
+    attention="binary_linear", projections="shift", mlp="moe_primitives"
+)
+# Deployment form of the full recipe: packed int8 shift weights.
+SHIFTADD_DEPLOY = ShiftAddPolicy(
+    attention="binary_linear", projections="shift", mlp="moe_primitives",
+    deploy=True)
+# Stage-1 only (LA + Add, projections/MLP untouched).
+STAGE1 = ShiftAddPolicy(attention="binary_linear")
+# Aggressive all-shift (paper shows the accuracy drop; we keep it for ablations).
+ALL_SHIFT = ShiftAddPolicy(attention="binary_linear", projections="shift", mlp="shift")

@@ -1,0 +1,130 @@
+"""Quantizers for the two multiplication primitives (paper §4.1, Fig. 2).
+
+Shift weights:   W_S = s * 2^P,  s = sign(W) ∈ {-1,+1},  P = round(log2|W|)
+Add operands:    binary codes b = sign(x) ∈ {-1,+1} (vanilla binarization [27];
+                 the paper shows this beats kernelized hashing in its framework)
+
+Both are trained with a straight-through estimator (STE, [69]); for deployment
+shift weights are *packed one int8 per weight*:
+
+    bit 7    : sign   (1 = negative)
+    bits 0-6 : P + 64 (P ∈ [-64, +63])
+
+so weight HBM traffic is 1 B/weight (vs 2 B bf16 / 4 B fp32) — the data-movement
+saving the paper measures on GPUs (App. A) realized TPU-natively.  The bf16
+power-of-two value is re-assembled *bit-exactly* from the exponent field:
+
+    bf16 bits = sign << 15 | (P + 127) << 7        (mantissa = 0  ⇒  exactly 2^P)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# P range representable both by the int8 packing and the bf16 exponent field.
+P_MIN = -64
+P_MAX = 63
+# bf16 exponent bias.
+_BF16_BIAS = 127
+
+
+def ste(quantized, latent):
+    """Straight-through estimator: forward `quantized`, gradient to `latent`."""
+    return latent + jax.lax.stop_gradient(quantized - latent)
+
+
+# ---------------------------------------------------------------------------
+# Binary (Add) quantization
+# ---------------------------------------------------------------------------
+
+def binarize(x, scale_axis=None):
+    """Vanilla binarization: (sign(x), scale) with scale = mean(|x|).
+
+    scale_axis=None gives a per-tensor scale (paper: "layer-wise Quant."); an
+    int/tuple gives per-channel scales. Returns (b, scale) with b ∈ {-1,+1},
+    same dtype as x (use `.astype(jnp.int8)` for storage).
+    """
+    scale = jnp.mean(jnp.abs(x), axis=scale_axis, keepdims=scale_axis is not None)
+    b = jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+    return b, scale.astype(x.dtype)
+
+
+def binarize_ste(x, scale_axis=None, with_scale=True):
+    """Fake-quantized binarization with STE for training.
+
+    Forward value is `scale * sign(x)` (or plain sign(x) when with_scale=False);
+    gradients flow straight through to x.
+    """
+    b, scale = binarize(x, scale_axis)
+    q = b * scale if with_scale else b
+    return ste(q, x)
+
+
+# ---------------------------------------------------------------------------
+# Power-of-two (Shift) quantization
+# ---------------------------------------------------------------------------
+
+def po2_quantize(w, p_min=P_MIN, p_max=P_MAX):
+    """Round |w| to the nearest power of two: returns (sign, P).
+
+    sign ∈ {-1,+1} (zeros get +1 and P=p_min, i.e. the smallest magnitude —
+    DeepShift-PS has no exact-zero representation and no scaling factor).
+    """
+    sign = jnp.where(w < 0, -1.0, 1.0).astype(w.dtype)
+    mag = jnp.maximum(jnp.abs(w.astype(jnp.float32)), 2.0 ** (p_min - 1))
+    p = jnp.clip(jnp.round(jnp.log2(mag)), p_min, p_max).astype(jnp.int32)
+    return sign, p
+
+
+def po2_value(sign, p, dtype=jnp.float32):
+    """Reconstruct s * 2^P (reference path; kernels use the exponent-bit
+    trick). ldexp, not exp2 — exp2 is inexact at extreme exponents on CPU."""
+    return jnp.ldexp(sign.astype(jnp.float32), p).astype(dtype)
+
+
+def po2_quantize_ste(w, p_min=P_MIN, p_max=P_MAX):
+    """Fake-quantize latent weights to s*2^P with STE (training forward path)."""
+    sign, p = po2_quantize(w, p_min, p_max)
+    return ste(po2_value(sign, p, w.dtype), w)
+
+
+# ---------------------------------------------------------------------------
+# int8 packing  (deployment format; 1 byte per weight)
+# ---------------------------------------------------------------------------
+
+def pack_po2(sign, p):
+    """Pack (sign ∈ {-1,+1}, P ∈ [-64,63]) into one int8 per weight."""
+    neg = (sign < 0).astype(jnp.uint8)
+    biased = (p.astype(jnp.int32) - P_MIN).astype(jnp.uint8)  # [0, 127]
+    return (jnp.left_shift(neg, 7) | biased).astype(jnp.uint8).view(jnp.int8)
+
+
+def unpack_po2(packed):
+    """Inverse of pack_po2: int8 → (sign fp32 ∈ {-1,+1}, P int32)."""
+    u = packed.view(jnp.uint8).astype(jnp.int32)
+    neg = jnp.right_shift(u, 7)
+    p = (u & 0x7F) + P_MIN
+    sign = 1.0 - 2.0 * neg.astype(jnp.float32)
+    return sign, p
+
+
+def po2_weight_from_packed(packed, dtype=jnp.bfloat16):
+    """Assemble s*2^P from packed int8 via bf16 exponent-bit construction.
+
+    This is the XLA twin of what the Pallas kernel does in VMEM: pure integer
+    ops + bitcast, no exp2. Exactly representable because bf16 has an 8-bit
+    exponent with bias 127 and we zero the mantissa.
+    """
+    u = packed.view(jnp.uint8).astype(jnp.uint16)
+    sign_bit = jnp.left_shift(u >> 7, 15)
+    p = (u & 0x7F).astype(jnp.int32) + P_MIN
+    exp_field = (p + _BF16_BIAS).astype(jnp.uint16)
+    bits = (sign_bit | jnp.left_shift(exp_field, 7)).astype(jnp.uint16)
+    w = jax.lax.bitcast_convert_type(bits, jnp.bfloat16)
+    return w.astype(dtype)
+
+
+def pack_from_dense(w):
+    """dense fp weight → packed int8 shift weight (deployment conversion)."""
+    sign, p = po2_quantize(w)
+    return pack_po2(sign, p)

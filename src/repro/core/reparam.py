@@ -1,0 +1,109 @@
+"""Dense → ShiftAdd reparameterization of pretrained checkpoints (paper §4).
+
+The paper's deployment story: start from pretrained weights, *reparameterize*
+(not train from scratch), finetune in two stages:
+
+  stage 1: attention — MSA → (binary-)linear attention; MatMuls → Add layers.
+           (Attention math has no weights; the conversion is a policy flip +
+           optional shift-reparam of the four projections.)
+  stage 2: MLPs — dense MLPs → Shift layers or the MoE-of-primitives
+           (Mult expert initialized FROM the pretrained MLP, Shift expert
+           from its power-of-two projection).
+
+These helpers are structure-agnostic tree rewriters; model classes declare
+which named subtrees are projections vs MLPs (see repro.nn.transformer).
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+
+
+def is_dense_leaf(subtree) -> bool:
+    return isinstance(subtree, dict) and "kernel" in subtree
+
+
+def dense_to_shift(subtree, mode="latent"):
+    """{"kernel", bias?} → ShiftLinear params (latent or packed)."""
+    assert is_dense_leaf(subtree), subtree.keys()
+    if mode == "latent":
+        out = {"w_latent": subtree["kernel"]}
+    else:
+        out = {"w_packed": quant.pack_from_dense(subtree["kernel"])}
+    if "bias" in subtree:
+        out["bias"] = subtree["bias"]
+    return out
+
+
+def shift_to_packed(subtree):
+    """ShiftLinear latent params → packed deployment params."""
+    out = {"w_packed": quant.pack_from_dense(subtree["w_latent"])}
+    if "bias" in subtree:
+        out["bias"] = subtree["bias"]
+    return out
+
+
+def dense_mlp_to_moe(mlp_params, expert_kinds=("mult", "shift"), up="up", down="down",
+                     router_init=None):
+    """Pretrained dense MLP → MoE-of-primitives params.
+
+    The Mult expert inherits the pretrained weights verbatim; the Shift expert
+    inherits their latent copy (so its first forward is the po2 projection of
+    the pretrained weights — the paper's warm start).
+    """
+    experts = []
+    for kind in expert_kinds:
+        experts.append({
+            "up": dict(mlp_params[up]) if kind == "mult"
+            else dense_to_shift(mlp_params[up]),
+            "down": dict(mlp_params[down]) if kind == "mult"
+            else dense_to_shift(mlp_params[down]),
+        })
+    d_model = mlp_params[up]["kernel"].shape[0]
+    if router_init is None:
+        router_init = jnp.zeros((d_model, len(expert_kinds)), jnp.float32)
+    return {"router": {"kernel": router_init}, "experts": experts}
+
+
+def rewrite_tree(params, rules, _path=""):
+    """Apply (regex, fn) rules to named subtrees; first match wins.
+
+    `fn` receives the subtree and returns its replacement. Paths are
+    slash-joined dict keys, e.g. "blocks/attn/q_proj".
+    """
+    for pattern, fn in rules:
+        if re.fullmatch(pattern, _path):
+            return fn(params)
+    if isinstance(params, dict):
+        return {k: rewrite_tree(v, rules, f"{_path}/{k}" if _path else k)
+                for k, v in params.items()}
+    if isinstance(params, (list, tuple)):
+        seq = [rewrite_tree(v, rules, f"{_path}/{i}") for i, v in enumerate(params)]
+        return type(params)(seq) if isinstance(params, tuple) else seq
+    return params
+
+
+def count_reparameterized(params):
+    """Diagnostics: how many leaves are shift-latent / packed / dense kernels."""
+    counts = {"dense": 0, "shift_latent": 0, "shift_packed": 0}
+
+    def walk(t):
+        if isinstance(t, dict):
+            if "kernel" in t:
+                counts["dense"] += 1
+            if "w_latent" in t:
+                counts["shift_latent"] += 1
+            if "w_packed" in t:
+                counts["shift_packed"] += 1
+            for v in t.values():
+                walk(v)
+        elif isinstance(t, (list, tuple)):
+            for v in t:
+                walk(v)
+
+    walk(params)
+    return counts

@@ -1,0 +1,80 @@
+"""ShiftLinear — the paper's `Shift` layer:  y = x @ (s * 2^P) + b.
+
+Two parameter modes:
+
+- ``mode="latent"`` (training): a latent fp32 weight is power-of-two
+  fake-quantized with an STE on every forward (DeepShift-Q-style latent
+  training; the paper's DeepShift-PS sign/P training is equivalent under STE
+  and this form converts losslessly to it).
+- ``mode="packed"`` (deployment): weights are 1 packed int8 per element
+  (sign | P+64). The forward uses the shift_matmul path — on TPU the Pallas
+  kernel, elsewhere the XLA twin that assembles bf16 via exponent bits.
+
+No scaling factor (paper App. E: DeepShift-PS, no scale). Bias stays fp32 —
+it is O(d) and irrelevant to both traffic and energy.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+
+
+class ShiftLinear:
+    def __init__(self, in_features, out_features, use_bias=True,
+                 dtype=jnp.float32, param_dtype=jnp.float32,
+                 mode="latent", name="shift_linear"):
+        assert mode in ("latent", "packed")
+        self.in_features = int(in_features)
+        self.out_features = int(out_features)
+        self.use_bias = use_bias
+        self.dtype = dtype
+        self.param_dtype = param_dtype
+        self.mode = mode
+        self.name = name
+
+    def init(self, key):
+        std = self.in_features ** -0.5
+        w = std * jax.random.truncated_normal(
+            key, -2.0, 2.0, (self.in_features, self.out_features), jnp.float32)
+        if self.mode == "latent":
+            params = {"w_latent": w.astype(self.param_dtype)}
+        else:
+            params = {"w_packed": quant.pack_from_dense(w)}
+        if self.use_bias:
+            params["bias"] = jnp.zeros((self.out_features,), self.param_dtype)
+        return params
+
+    def init_from_dense(self, dense_params):
+        """Reparameterize a pretrained Dense layer's params (paper stage 2)."""
+        w = dense_params["kernel"]
+        if self.mode == "latent":
+            params = {"w_latent": w.astype(self.param_dtype)}
+        else:
+            params = {"w_packed": quant.pack_from_dense(w)}
+        if self.use_bias:
+            bias = dense_params.get("bias")
+            params["bias"] = (jnp.zeros((self.out_features,), self.param_dtype)
+                              if bias is None else bias.astype(self.param_dtype))
+        return params
+
+    def freeze(self, params):
+        """latent → packed int8 deployment params."""
+        out = {"w_packed": quant.pack_from_dense(params["w_latent"])}
+        if self.use_bias:
+            out["bias"] = params["bias"]
+        return out
+
+    def __call__(self, params, x):
+        x = x.astype(self.dtype)
+        if "w_latent" in params:
+            w_q = quant.po2_quantize_ste(params["w_latent"]).astype(self.dtype)
+            y = jnp.dot(x, w_q)
+        else:
+            from repro.kernels import ops  # lazy: kernels import core
+
+            y = ops.shift_matmul(x, params["w_packed"])
+        if self.use_bias:
+            y = y + params["bias"].astype(self.dtype)
+        return y

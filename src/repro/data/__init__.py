@@ -1,0 +1,1 @@
+from repro.data.pipeline import SyntheticLMData, SyntheticImageData, shard_batch

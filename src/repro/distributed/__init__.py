@@ -1,0 +1,8 @@
+from repro.distributed.sharding import (
+    LOGICAL_AXIS_RULES,
+    logical_to_pspec,
+    shardings_from_spec,
+    batch_sharding,
+    replicated,
+)
+from repro.distributed.collectives import compressed_psum

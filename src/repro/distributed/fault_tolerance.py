@@ -1,0 +1,90 @@
+"""Fault tolerance & straggler mitigation hooks (DESIGN.md §3).
+
+On a real multi-pod deployment the failure signal is a NCCL/ICI timeout or a
+coordinator heartbeat loss; here the same control flow is exercised through
+`FailureInjector` (tests raise at a chosen step) and the train loop's
+catch → restore-from-checkpoint → replay path. The pieces:
+
+- FailureInjector: deterministic failure at step k (or probabilistic).
+- StragglerMonitor: per-step wall-time watermarks; steps slower than
+  `threshold ×` the running median are flagged (the mitigation at scale is
+  re-scheduling the slow host's data shard / evicting the host; the monitor
+  is the detector both would share).
+- elastic_mesh_shape: given the surviving chip count, pick the largest mesh
+  this framework's sharding rules can use (power-of-two data axis, fixed
+  model axis), for restart-with-fewer-chips (elastic scaling).
+"""
+from __future__ import annotations
+
+import time
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+class FailureInjector:
+    def __init__(self, fail_at_steps=(), rng=None, prob=0.0):
+        self.fail_at = set(fail_at_steps)
+        self.prob = prob
+        self.rng = rng
+        self._fired = set()
+
+    def maybe_fail(self, step: int):
+        if step in self.fail_at and step not in self._fired:
+            self._fired.add(step)
+            raise SimulatedFailure(f"injected failure at step {step}")
+        if self.prob and self.rng is not None and self.rng.random() < self.prob:
+            raise SimulatedFailure(f"random injected failure at step {step}")
+
+
+class StragglerMonitor:
+    def __init__(self, threshold=2.0, window=32):
+        self.threshold = threshold
+        self.window = window
+        self.times = []
+        self.flagged = []
+
+    def record(self, step: int, seconds: float):
+        self.times.append(seconds)
+        recent = sorted(self.times[-self.window:])
+        median = recent[len(recent) // 2]
+        if len(self.times) >= 5 and seconds > self.threshold * median:
+            self.flagged.append((step, seconds, median))
+            return True
+        return False
+
+
+class StepTimer:
+    def __init__(self):
+        self.t0 = None
+
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.seconds = time.perf_counter() - self.t0
+        return False
+
+
+def elastic_mesh_shape(n_devices: int, model_parallel: int = 16,
+                       multi_pod: bool = False):
+    """Largest mesh expressible with the surviving devices.
+
+    Keeps the model axis fixed (parameter shardings stay valid) and shrinks
+    the data/pod axes — restart resizes only the batch sharding.
+    """
+    if n_devices < model_parallel:
+        # Degenerate survival: shrink model axis to the largest divisor.
+        m = 1
+        while m * 2 <= n_devices:
+            m *= 2
+        return ((1, m) if not multi_pod else (1, 1, m),
+                ("data", "model") if not multi_pod else ("pod", "data", "model"))
+    rest = n_devices // model_parallel
+    if multi_pod and rest >= 2:
+        pods = 2
+        data = rest // pods
+        return (pods, data, model_parallel), ("pod", "data", "model")
+    return (rest, model_parallel), ("data", "model")

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+- shift_matmul.py — MatShift: packed-int8 power-of-two weights, bf16 exponent
+  assembly in VMEM (paper Fig. 4 / App. A).
+- add_matmul.py — MatAdd: batched matmul against a binary ±1 operand
+  (paper Fig. 5).
+- linear_attention.py — fused chunked causal binary linear attention with the
+  (d_k × d_v) running state resident in VMEM (paper §4.1 on the Q(KᵀV) path).
+
+ops.py holds the jit'd wrappers (padding + impl selection + custom VJPs);
+ref.py the pure-jnp oracles every kernel is tested against.
+"""

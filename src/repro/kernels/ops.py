@@ -1,0 +1,192 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Implementation selection (per-call `impl=` or process-wide default):
+
+- "pallas"    — real TPU kernel (the deployment path).
+- "interpret" — Pallas interpret mode: kernel body executed on CPU; used by
+                the correctness tests against the ref.py oracles.
+- "xla"       — semantics-identical pure-XLA twin with the *same storage
+                format* (packed int8 weights, int8 binary operands). This is
+                what the CPU dry-run lowers, so the roofline sees the real
+                HBM layout (1 B/weight) without TPU codegen.
+
+Default is "pallas" on TPU and "xla" elsewhere. Wrappers handle padding to
+block multiples and define custom VJPs (gradients flow to activations only —
+packed operands are frozen deployment artifacts).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import po2_weight_from_packed
+from repro.kernels import add_matmul as _addmm
+from repro.kernels import linear_attention as _linattn
+from repro.kernels import ref as _ref
+from repro.kernels import shift_matmul as _shiftmm
+
+_DEFAULT_IMPL = None
+
+
+def default_impl() -> str:
+    global _DEFAULT_IMPL
+    if _DEFAULT_IMPL is None:
+        _DEFAULT_IMPL = "pallas" if jax.default_backend() == "tpu" else "xla"
+    return _DEFAULT_IMPL
+
+
+def set_default_impl(impl: str):
+    assert impl in ("pallas", "interpret", "xla")
+    global _DEFAULT_IMPL
+    _DEFAULT_IMPL = impl
+
+
+def _pad_to(x, multiple, axis):
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+# ---------------------------------------------------------------------------
+# shift_matmul: y = x @ (s * 2^P), packed int8 weights
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def shift_matmul(x, w_packed, impl=None):
+    """x: (..., K) float; w_packed: (K, N) int8 → (..., N)."""
+    return _shift_matmul_fwd_impl(x, w_packed, impl)
+
+
+def _shift_matmul_fwd_impl(x, w_packed, impl):
+    impl = impl or default_impl()
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k)
+    if impl == "xla":
+        y = _ref.shift_matmul_ref(x2, w_packed)
+    else:
+        m = x2.shape[0]
+        n = w_packed.shape[1]
+        bm = min(_shiftmm.BM, -(-m // 8) * 8)  # sublane-aligned (multiple of 8)
+        xp = _pad_to(_pad_to(x2, bm, 0), _shiftmm.BK, 1)
+        wp = _pad_to(_pad_to(w_packed, _shiftmm.BK, 0), _shiftmm.BN, 1)
+        y = _shiftmm.shift_matmul_pallas(
+            xp, wp, bm=bm, interpret=(impl == "interpret"))[:m, :n]
+    return y.reshape(*lead, -1)
+
+
+def _shift_matmul_vjp_fwd(x, w_packed, impl):
+    return _shift_matmul_fwd_impl(x, w_packed, impl), (w_packed,)
+
+
+def _shift_matmul_vjp_bwd(impl, res, g):
+    (w_packed,) = res
+    w = po2_weight_from_packed(w_packed, jnp.float32)
+    gx = jnp.einsum("...n,kn->...k", g.astype(jnp.float32), w).astype(g.dtype)
+    return (gx, None)
+
+
+shift_matmul.defvjp(_shift_matmul_vjp_fwd, _shift_matmul_vjp_bwd)
+
+
+# ---------------------------------------------------------------------------
+# add_matmul: y = x @ b, b int8 in {-1, 0, +1}
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def add_matmul(x, b, impl=None):
+    """x: (G, M, K) float; b: (G, K, N) int8 → (G, M, N)."""
+    return _add_matmul_fwd_impl(x, b, impl)
+
+
+def _add_matmul_fwd_impl(x, b, impl):
+    impl = impl or default_impl()
+    if impl == "xla":
+        return _ref.add_matmul_ref(x, b)
+    g, m, k = x.shape
+    n = b.shape[-1]
+    bm = min(_addmm.BM, -(-m // 8) * 8)      # sublane-aligned
+    bn = min(_addmm.BN, -(-n // 128) * 128)  # lane-aligned
+    xp = _pad_to(_pad_to(x, bm, 1), _addmm.BK, 2)
+    bp = _pad_to(_pad_to(b, _addmm.BK, 1), bn, 2)
+    y = _addmm.add_matmul_pallas(xp, bp, bm=bm, bn=bn,
+                                 interpret=(impl == "interpret"))
+    return y[:, :m, :n]
+
+
+def _add_matmul_vjp_fwd(x, b, impl):
+    return _add_matmul_fwd_impl(x, b, impl), (b,)
+
+
+def _add_matmul_vjp_bwd(impl, res, g):
+    (b,) = res
+    gx = jnp.einsum("gmn,gkn->gmk", g.astype(jnp.float32),
+                    b.astype(jnp.float32)).astype(g.dtype)
+    return (gx, None)
+
+
+add_matmul.defvjp(_add_matmul_vjp_fwd, _add_matmul_vjp_bwd)
+
+
+# ---------------------------------------------------------------------------
+# bit-packed add_matmul (beyond-paper: 1 bit/element binary operand)
+# ---------------------------------------------------------------------------
+
+def add_matmul_bitpacked(x, packed, impl=None):
+    """x: (G, M, K) float; packed: (G, K//8, N) uint8 ±1 codes → (G, M, N)."""
+    from repro.kernels import add_matmul_packed as _pk
+
+    impl = impl or default_impl()
+    if impl == "xla":
+        b = _pk.unpack_bits(packed, jnp.float32)
+        return _ref.add_matmul_ref(x, b)
+    g, m, k = x.shape
+    n = packed.shape[-1]
+    bm = min(_pk.BM, -(-m // 8) * 8)
+    bn = min(_pk.BN, -(-n // 128) * 128)
+    xp = _pad_to(_pad_to(x, bm, 1), _pk.BK8 * 8, 2)
+    # pad packed K8 rows with 0x55? No: zero bytes decode to -1 rows, which
+    # would corrupt the sum — pad x's K with zeros instead (0 * ±1 = 0) and
+    # the packed rows with anything; zeros are fine since x is zero there.
+    pp = _pad_to(_pad_to(packed, _pk.BK8, 1), bn, 2)
+    y = _pk.add_matmul_packed_pallas(xp, pp, bm=bm, bn=bn,
+                                     interpret=(impl == "interpret"))
+    return y[:, :m, :n]
+
+
+# ---------------------------------------------------------------------------
+# fused causal binary linear attention
+# ---------------------------------------------------------------------------
+
+def binary_linear_attention_fused(q, k, v, *, chunk=None, impl=None):
+    """q,k: (B, H, N, Dk); v: (B, H, N, Dv). Causal, includes self.
+
+    Inference/serving path (no VJP; training uses repro.core.add_attention).
+    """
+    impl = impl or default_impl()
+    b, h, n, dk = q.shape
+    dv = v.shape[-1]
+    if impl == "xla":
+        return _ref.binary_linear_attention_ref(q, k, v, causal=True)
+    chunk = chunk or min(_linattn.CHUNK, n)
+    qg = q.reshape(b * h, n, dk)
+    kg = k.reshape(b * h, n, dk)
+    vg = v.reshape(b * h, n, dv)
+    # Lane-align head dims; the kernel masks the padded lanes (dk_true).
+    qp = _pad_to(qg, 128, 2)
+    kp = _pad_to(kg, 128, 2)
+    vp = _pad_to(vg, 128, 2)
+    pad_n = (-n) % chunk
+    if pad_n:
+        qp = _pad_to(qp, chunk, 1)
+        kp = _pad_to(kp, chunk, 1)
+        vp = _pad_to(vp, chunk, 1)
+    out = _linattn.binary_linear_attention_pallas(
+        qp, kp, vp, dk_true=dk, chunk=chunk, interpret=(impl == "interpret"))
+    return out[:, :n, :dv].reshape(b, h, n, dv)

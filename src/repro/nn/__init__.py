@@ -1,0 +1,18 @@
+from repro.core.dense import Dense
+from repro.nn.layers import (
+    RMSNorm,
+    LayerNorm,
+    Embedding,
+    MLP,
+    DWConv1D,
+    make_linear,
+    apply_rope,
+    apply_mrope,
+    rope_freqs,
+)
+from repro.nn.attention import Attention, MLAttention
+from repro.nn.recurrent import RGLRUBlock, RWKV6TimeMix, RWKV6ChannelMix
+from repro.nn.moe import TokenChoiceMoE
+from repro.nn.blocks import TransformerBlock
+from repro.nn.model import LanguageModel
+from repro.nn.vit import ShiftAddViT

@@ -1,0 +1,139 @@
+"""Transformer block: (mixer, feed) pair selected by (config, policy).
+
+mixer ∈ {GQA attention, local attention, MLA, RG-LRU, RWKV6 time-mix}
+feed  ∈ {MLP (dense|shift), MoE-of-primitives (the paper), token-choice MoE
+         (the architecture's own), RWKV6 channel-mix}
+
+Pre-norm residual wiring; `parallel_block=True` gives the GPT-J/Command-R
+parallel attention+FFN form. Every block returns (x, aux_scalars) where aux
+carries MoE balance losses (summed over layers by the model).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import energy
+from repro.core.moe_primitives import MoEPrimitives
+from repro.nn import layers as L
+from repro.nn.attention import Attention, MLAttention
+from repro.nn.moe import TokenChoiceMoE
+from repro.nn.recurrent import RGLRUBlock, RWKV6ChannelMix, RWKV6TimeMix
+
+ZERO_AUX = {"balance_loss": jnp.float32(0.0), "drop_fraction": jnp.float32(0.0)}
+
+
+def _make_mixer(cfg, kind):
+    if kind in ("attn", "local_attn"):
+        if cfg.mla is not None:
+            return MLAttention(cfg)
+        return Attention(cfg, layer_kind=kind)
+    if kind == "rglru":
+        return RGLRUBlock(cfg)
+    if kind == "rwkv6":
+        return RWKV6TimeMix(cfg)
+    raise ValueError(kind)
+
+
+def _make_feed(cfg, kind):
+    dt, pdt = cfg.activation_dtype, cfg.weight_dtype
+    p = cfg.policy
+    if kind == "rwkv6":
+        return RWKV6ChannelMix(cfg)
+    if cfg.moe is not None:
+        return TokenChoiceMoE(cfg)
+    if p.mlp == "moe_primitives":
+        experts = [
+            L.MLP(cfg.d_model, cfg.d_ff, cfg.mlp_kind,
+                  "dense" if ek == "mult" else p.mlp_linear(),
+                  cfg.use_bias, dt, pdt)
+            for ek in p.moe_experts
+        ]
+        lat = energy.expert_latencies(1024, cfg.d_model, cfg.d_ff, p.moe_experts)
+        return MoEPrimitives(cfg.d_model, cfg.d_ff, expert_kinds=p.moe_experts,
+                             capacity_factor=cfg.moe_primitives_capacity,
+                             latency_aware=p.latency_aware, router_noise=0.0,
+                             dtype=dt, param_dtype=pdt,
+                             experts=experts, latencies=lat)
+    lin = p.mlp_linear() if p.mlp == "shift" else "dense"
+    return L.MLP(cfg.d_model, cfg.d_ff, cfg.mlp_kind, lin, cfg.use_bias, dt, pdt)
+
+
+class TransformerBlock:
+    def __init__(self, cfg, kind="attn"):
+        self.cfg = cfg
+        self.kind = kind
+        self.parallel = getattr(cfg, "parallel_block", False)
+        self.mixer = _make_mixer(cfg, kind)
+        self.feed = _make_feed(cfg, kind)
+        dt, pdt = cfg.activation_dtype, cfg.weight_dtype
+        self.norm1 = L.make_norm(cfg.norm, cfg.d_model, cfg.norm_eps, dt, pdt)
+        self.norm2 = None if self.parallel else L.make_norm(
+            cfg.norm, cfg.d_model, cfg.norm_eps, dt, pdt)
+        self._feed_has_aux = isinstance(self.feed, (TokenChoiceMoE, MoEPrimitives))
+
+    def init(self, key):
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        p = {"mixer": self.mixer.init(k1), "feed": self.feed.init(k2),
+             "norm1": self.norm1.init(k3)}
+        if self.norm2 is not None:
+            p["norm2"] = self.norm2.init(k4)
+        return p
+
+    def spec(self, params):
+        s = {"mixer": self.mixer.spec(params["mixer"]),
+             "feed": self.feed.spec(params["feed"]),
+             "norm1": self.norm1.spec()}
+        if self.norm2 is not None:
+            s["norm2"] = self.norm2.spec()
+        return s
+
+    def _apply_feed(self, params, x, train):
+        if self._feed_has_aux:
+            y, aux = self.feed(params["feed"], x, train=train)
+            return y, {"balance_loss": aux["balance_loss"].astype(jnp.float32),
+                       "drop_fraction": aux["drop_fraction"].astype(jnp.float32)}
+        return self.feed(params["feed"], x), ZERO_AUX
+
+    def __call__(self, params, x, positions=None, train=True):
+        h = self.norm1(params["norm1"], x)
+        mix = self.mixer(params["mixer"], h, positions=positions, train=train)
+        if self.parallel:
+            ff, aux = self._apply_feed(params, h, train)
+            return x + mix + ff, aux
+        x = x + mix
+        h2 = self.norm2(params["norm2"], x)
+        ff, aux = self._apply_feed(params, h2, train)
+        return x + ff, aux
+
+    # -- decode ---------------------------------------------------------------
+    def init_cache(self, batch, max_len, dtype=jnp.bfloat16):
+        cache = {"mixer": self.mixer.init_cache(batch, max_len, dtype)}
+        if hasattr(self.feed, "init_cache"):
+            cache["feed"] = self.feed.init_cache(batch, max_len, dtype)
+        return cache
+
+    def decode_step(self, params, x_t, cache):
+        """x_t: (B, d_model) → (y_t, cache)."""
+        h = self.norm1(params["norm1"], x_t[:, None])[:, 0]
+        mix, mixer_cache = self.mixer.decode_step(params["mixer"], h, cache["mixer"])
+        new_cache = {"mixer": mixer_cache}
+        if self.parallel:
+            ff, fc = self._feed_step(params, h, cache)
+            if fc is not None:
+                new_cache["feed"] = fc
+            return x_t + mix + ff, new_cache
+        x_t = x_t + mix
+        h2 = self.norm2(params["norm2"], x_t[:, None])[:, 0]
+        ff, fc = self._feed_step(params, h2, cache)
+        if fc is not None:
+            new_cache["feed"] = fc
+        return x_t + ff, new_cache
+
+    def _feed_step(self, params, h, cache):
+        if hasattr(self.feed, "decode_step"):
+            return self.feed.decode_step(params["feed"], h, cache["feed"])
+        if self._feed_has_aux:
+            y, _ = self.feed(params["feed"], h[:, None], train=False)
+            return y[:, 0], None
+        return self.feed(params["feed"], h[:, None])[:, 0], None

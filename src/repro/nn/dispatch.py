@@ -1,0 +1,105 @@
+"""Grouped capacity dispatch for MoE layers (GShard-style groups, sort-based).
+
+Why groups: routing over the *global* token axis (argsort/cumsum/scatter over
+~1M tokens) forces GSPMD to replicate dispatch buffers on every device — the
+69 GiB/device failure mode. Tokens are instead split into G groups that shard
+over the (pod, data) mesh axes; every dispatch op is per-group, so routing
+stays device-local and the only cross-device movement is the expert-parallel
+reshard of the (G, E, cap, d) buffer on the model axis (the classic MoE
+all-to-all, inserted by GSPMD at the sharding constraint).
+
+Capacity is per-group (cap_e per expert per group) — statistically equivalent
+to global capacity for iid token order, and the paper's latency-aware
+capacities translate per group unchanged. Supports heterogeneous per-expert
+capacities (the MoE-of-primitives needs them).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+
+
+def choose_groups(tokens: int, target_group=4096, min_groups=32) -> int:
+    """Number of routing groups: ≥ min_groups when possible (so groups shard
+    over pod×data), each ≥64 tokens (smaller groups degrade routing quality
+    more than replication costs at that size), and G | tokens."""
+    if tokens % target_group == 0 and tokens // target_group >= min_groups:
+        return tokens // target_group
+    for size in (2048, 1024, 512, 256, 128, 64):
+        if tokens % size == 0 and tokens // size >= min_groups:
+            return tokens // size
+    if tokens % min_groups == 0 and tokens // min_groups >= 64:
+        return min_groups
+    return 1
+
+
+def dispatch(xg, expert_idx, keep_gate, caps):
+    """Per-group sort-based dispatch, vmapped over the leading group axis.
+
+    xg: (G, S, d); expert_idx: (G, S, k); keep_gate: (G, S, k) combine weights.
+    caps: python list of per-expert capacities (static).
+    Returns (buf (G, total, d), aux) where total = sum(caps); expert e owns
+    rows [offset_e, offset_e + cap_e). aux carries what combine() needs.
+    """
+    n_exp = len(caps)
+    offsets = [0]
+    for c in caps:
+        offsets.append(offsets[-1] + c)
+    total = offsets[-1]
+    caps_arr = jnp.asarray(caps, jnp.int32)
+    offs_arr = jnp.asarray(offsets[:-1], jnp.int32)
+
+    def one(x, idx, gate):
+        s, k = idx.shape
+        flat_e = idx.reshape(s * k)
+        flat_g = gate.reshape(s * k)
+        flat_t = jnp.repeat(jnp.arange(s), k)
+        counts = jnp.bincount(flat_e, length=n_exp)
+        starts = jnp.cumsum(counts) - counts
+        order = jnp.argsort(flat_e, stable=True)      # token-order priority
+        e_sorted = flat_e[order]
+        pos = jnp.arange(s * k) - starts[e_sorted]
+        keep = pos < caps_arr[e_sorted]
+        slot = jnp.where(keep, offs_arr[e_sorted] + pos, total)
+        tok = flat_t[order]
+        gathered = x[tok] * keep[:, None].astype(x.dtype)
+        buf = jnp.zeros((total + 1, x.shape[-1]), x.dtype).at[slot].set(gathered)
+        w = flat_g[order] * keep.astype(flat_g.dtype)
+        return buf[:-1], slot, tok, w, counts, keep
+
+    buf, slot, tok, w, counts, keep = jax.vmap(one)(xg, expert_idx, keep_gate)
+    aux = {"slot": slot, "tok": tok, "w": w,
+           "tokens_per_expert": jnp.sum(counts, axis=0),
+           "drop_fraction": 1.0 - jnp.mean(keep.astype(jnp.float32)),
+           "total": total}
+    return buf, aux
+
+
+def combine(expert_out_flat, aux, s, d):
+    """expert_out_flat: (G, total, d) expert outputs in slot order → (G, S, d)."""
+    total = aux["total"]
+
+    def one(out_flat, slot, tok, w):
+        y_sorted = out_flat[jnp.minimum(slot, total - 1)]
+        contrib = y_sorted * w[:, None].astype(y_sorted.dtype)
+        return jnp.zeros((s, d), out_flat.dtype).at[tok].add(contrib)
+
+    return jax.vmap(one)(expert_out_flat, aux["slot"], aux["tok"], aux["w"])
+
+
+def group_tokens(x, d_model, target_group=4096, min_groups=32):
+    """(..., d) → (G, S, d) plus an ungroup closure."""
+    lead = x.shape[:-1]
+    tokens = 1
+    for s in lead:
+        tokens *= int(s)
+    g = choose_groups(tokens, target_group, min_groups)
+    xg = x.reshape(g, tokens // g, d_model)
+    xg = constrain(xg, ("batch", None, None))
+
+    def ungroup(y):
+        return y.reshape(*lead, d_model)
+
+    return xg, ungroup

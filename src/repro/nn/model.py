@@ -1,0 +1,250 @@
+"""LanguageModel: embeddings → scanned block stack → norm → logits.
+
+Covers all assigned families: decoder LMs (dense/GQA/MLA/MoE), hybrid
+(RG-LRU + local attention), SSM (RWKV6), encoder-only (HuBERT — causal=False),
+and stub-frontend modalities (input_mode="embeddings" for [vlm]/[audio]:
+the backbone consumes precomputed patch/frame embeddings per the assignment).
+
+Depth is organized as `n_cycles` repetitions of `block_pattern` (+ remainder
+blocks) and scanned with `lax.scan` so HLO size is O(1) in depth; per-block
+remat policy per cfg.remat. Decode threads a per-cycle cache stack through the
+same scan.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import layers as L
+from repro.nn.blocks import TransformerBlock
+
+
+def _stack_init(block, key, n):
+    return jax.vmap(block.init)(jax.random.split(key, n))
+
+
+def _remat(fn, mode):
+    if mode == "none":
+        return fn
+    if mode == "full":
+        return jax.checkpoint(fn)
+    if mode == "dots_saveable":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    raise ValueError(mode)
+
+
+class LanguageModel:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        pattern = cfg.block_pattern
+        self.pattern = pattern
+        self.n_cycles = cfg.n_layers // len(pattern)
+        self.n_rem = cfg.n_layers % len(pattern)
+        self.blocks = [TransformerBlock(cfg, k) for k in pattern]
+        self.rem_blocks = [TransformerBlock(cfg, pattern[j])
+                           for j in range(self.n_rem)]
+        dt, pdt = cfg.activation_dtype, cfg.weight_dtype
+        self.embed = None
+        if cfg.input_mode == "tokens":
+            self.embed = L.Embedding(cfg.vocab_size, cfg.d_model, dt, pdt)
+        self.final_norm = L.make_norm(cfg.norm, cfg.d_model, cfg.norm_eps, dt, pdt)
+        self.head = None
+        if not (cfg.tie_embeddings and self.embed is not None):
+            from repro.core.dense import Dense
+            self.head = Dense(cfg.d_model, cfg.vocab_size, use_bias=False,
+                              dtype=dt, param_dtype=pdt)
+
+    # -- params ----------------------------------------------------------------
+    def init(self, key):
+        keys = jax.random.split(key, len(self.blocks) + self.n_rem + 3)
+        p = {"layers": [
+            _stack_init(blk, keys[j], self.n_cycles)
+            for j, blk in enumerate(self.blocks)
+        ]}
+        if self.n_rem:
+            p["rem"] = [blk.init(keys[len(self.blocks) + j])
+                        for j, blk in enumerate(self.rem_blocks)]
+        if self.embed is not None:
+            p["embed"] = self.embed.init(keys[-3])
+        p["final_norm"] = self.final_norm.init(keys[-2])
+        if self.head is not None:
+            p["head"] = self.head.init(keys[-1])
+        return p
+
+    def spec(self, params):
+        """Logical-axis tree matching init() output. Scanned stacks get a
+        leading 'layers' axis."""
+        def add_layers(tree):
+            return jax.tree_util.tree_map(
+                lambda axes: ("layers",) + tuple(axes), tree,
+                is_leaf=lambda x: isinstance(x, tuple))
+
+        def unstack(a):
+            # Works for arrays and ShapeDtypeStructs (eval_shape'd params).
+            if isinstance(a, jax.ShapeDtypeStruct):
+                return jax.ShapeDtypeStruct(a.shape[1:], a.dtype)
+            return a[0]
+
+        s = {"layers": [
+            add_layers(blk.spec(jax.tree_util.tree_map(unstack, params["layers"][j])))
+            for j, blk in enumerate(self.blocks)
+        ]}
+        if self.n_rem:
+            s["rem"] = [blk.spec(params["rem"][j])
+                        for j, blk in enumerate(self.rem_blocks)]
+        if self.embed is not None:
+            s["embed"] = self.embed.spec()
+        s["final_norm"] = self.final_norm.spec()
+        if self.head is not None:
+            s["head"] = {"kernel": ("embed", "vocab")}
+        return s
+
+    # -- forward ----------------------------------------------------------------
+    def _inputs_to_x(self, params, inputs):
+        from repro.distributed.sharding import constrain
+
+        if self.embed is not None:
+            x = self.embed(params["embed"], inputs)
+        else:
+            x = inputs.astype(self.cfg.activation_dtype)
+        # Keep the embedding-gather output batch-sharded (avoids GSPMD's
+        # involuntary full remat on the vocab-sharded table gather).
+        axes = ("batch",) + (None,) * (x.ndim - 1)
+        return constrain(x, axes)
+
+    def _default_positions(self, batch, n):
+        pos = jnp.arange(n, dtype=jnp.int32)[None]
+        if self.cfg.rope == "mrope":
+            return jnp.broadcast_to(pos[:, None], (batch, 3, n))
+        return jnp.broadcast_to(pos, (batch, n))
+
+    def __call__(self, params, inputs, positions=None, train=True):
+        """inputs: (B, N) int32 tokens or (B, N, d) embeddings.
+        Returns (logits (B, N, vocab), aux)."""
+        cfg = self.cfg
+        x = self._inputs_to_x(params, inputs)
+        b, n = x.shape[0], x.shape[1]
+        if positions is None:
+            positions = self._default_positions(b, n)
+
+        def apply_block(blk, p, x):
+            fn = lambda pp, xx: blk(pp, xx, positions=positions, train=train)
+            return _remat(fn, cfg.remat)(p, x)
+
+        bal = jnp.float32(0.0)
+        drop = jnp.float32(0.0)
+        if cfg.scan_layers and self.n_cycles > 0:
+            def body(carry, layer_params):
+                x, bal, drop = carry
+                for j, blk in enumerate(self.blocks):
+                    x, aux = apply_block(blk, layer_params[j], x)
+                    bal += aux["balance_loss"]
+                    drop += aux["drop_fraction"]
+                return (x, bal, drop), None
+
+            (x, bal, drop), _ = jax.lax.scan(
+                body, (x, bal, drop), tuple(params["layers"]))
+        else:
+            for i in range(self.n_cycles):
+                for j, blk in enumerate(self.blocks):
+                    pj = jax.tree_util.tree_map(lambda a: a[i], params["layers"][j])
+                    x, aux = apply_block(blk, pj, x)
+                    bal += aux["balance_loss"]
+                    drop += aux["drop_fraction"]
+        for j, blk in enumerate(self.rem_blocks):
+            x, aux = apply_block(blk, params["rem"][j], x)
+            bal += aux["balance_loss"]
+            drop += aux["drop_fraction"]
+
+        x = self.final_norm(params["final_norm"], x)
+        if self.head is not None:
+            logits = self.head(params["head"], x)
+        else:
+            logits = self.embed.attend(params["embed"], x)
+        aux = {"balance_loss": bal / max(cfg.n_layers, 1),
+               "drop_fraction": drop / max(cfg.n_layers, 1)}
+        return logits, aux
+
+    # -- loss ---------------------------------------------------------------
+    def loss(self, params, batch, train=True):
+        """batch: {"inputs": ..., "labels": (B,N) int32, "positions": opt}.
+        Returns (scalar, metrics). Adds λ·(L_IMP+L_LOAD)/token-choice aux."""
+        logits, aux = self(params, batch["inputs"],
+                           positions=batch.get("positions"), train=train)
+        labels = batch["labels"]
+        logits = logits.astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+        mask = batch.get("mask")
+        if mask is None:
+            ce = -jnp.mean(ll)
+        else:
+            ce = -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        lam = self.cfg.policy.balance_loss_weight
+        total = ce + lam * aux["balance_loss"]
+        metrics = {"ce": ce, "balance_loss": aux["balance_loss"],
+                   "drop_fraction": aux["drop_fraction"], "loss": total}
+        return total, metrics
+
+    # -- decode ----------------------------------------------------------------
+    def init_cache(self, batch, max_len, dtype=None):
+        dtype = dtype or self.cfg.activation_dtype
+
+        def stacked(blk):
+            one = blk.init_cache(batch, max_len, dtype)
+            return jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a, (self.n_cycles,) + a.shape), one)
+
+        cache = {"layers": [stacked(blk) for blk in self.blocks]}
+        if self.n_rem:
+            cache["rem"] = [blk.init_cache(batch, max_len, dtype)
+                            for blk in self.rem_blocks]
+        return cache
+
+    def decode_step(self, params, inputs_t, cache):
+        """inputs_t: (B,) int32 token or (B, d) embedding → (logits_t, cache)."""
+        if self.embed is not None:
+            x_t = self.embed(params["embed"], inputs_t)
+        else:
+            x_t = inputs_t.astype(self.cfg.activation_dtype)
+
+        if self.cfg.scan_layers and self.n_cycles > 0:
+            def body(x_t, xs):
+                layer_params, layer_cache = xs
+                new_caches = []
+                for j, blk in enumerate(self.blocks):
+                    x_t, c = blk.decode_step(layer_params[j], x_t, layer_cache[j])
+                    new_caches.append(c)
+                return x_t, tuple(new_caches)
+
+            x_t, new_stacks = jax.lax.scan(
+                body, x_t, (tuple(params["layers"]), tuple(cache["layers"])))
+            new_cache = {"layers": list(new_stacks)}
+        else:
+            new_layers = []
+            for j, blk in enumerate(self.blocks):
+                stack_c = []
+                for i in range(self.n_cycles):
+                    pj = jax.tree_util.tree_map(lambda a: a[i], params["layers"][j])
+                    cj = jax.tree_util.tree_map(lambda a: a[i], cache["layers"][j])
+                    x_t, c = blk.decode_step(pj, x_t, cj)
+                    stack_c.append(c)
+                new_layers.append(jax.tree_util.tree_map(
+                    lambda *xs: jnp.stack(xs), *stack_c))
+            new_cache = {"layers": new_layers}
+        if self.n_rem:
+            new_rem = []
+            for j, blk in enumerate(self.rem_blocks):
+                x_t, c = blk.decode_step(params["rem"][j], x_t, cache["rem"][j])
+                new_rem.append(c)
+            new_cache["rem"] = new_rem
+
+        x_t = self.final_norm(params["final_norm"], x_t[:, None])[:, 0]
+        if self.head is not None:
+            logits = self.head(params["head"], x_t)
+        else:
+            logits = self.embed.attend(params["embed"], x_t)
+        return logits, new_cache

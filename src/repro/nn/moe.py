@@ -1,0 +1,128 @@
+"""Token-choice top-k MoE (the *architectures'* MoE: Qwen3-MoE, Phi-3.5-MoE).
+
+Sort-based static-capacity dispatch: assignments are ordered by expert via a
+stable argsort and scattered into an (E, C, d) buffer — O(T·d) memory instead
+of the (T, E, C) one-hot dispatch tensor (which at E=128, k=8 would be
+hundreds of GB). Dropped tokens (beyond capacity) contribute zero, standard
+Switch behavior. Expert weights are stacked (E, ...) and shard over the
+`experts` logical axis (EP on the `model` mesh axis).
+
+Composition with the paper (DESIGN.md §5): under `policy.mlp="shift"` /
+`"moe_primitives"` the expert FFNs themselves become shift experts — the
+beyond-paper composition of the two MoE levels. Expert weights then store the
+*latent* shift parameters; the forward fake-quantizes with STE exactly like
+ShiftLinear (we inline it here because the weights are stacked per expert).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import po2_quantize_ste
+from repro.nn import layers as L
+
+
+class TokenChoiceMoE:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        m = cfg.moe
+        self.m = m
+        self.d = cfg.d_model
+        self.f = m.d_expert
+        self.e = m.n_experts
+        self.k = m.top_k
+        self.gated = cfg.mlp_kind in ("swiglu", "geglu")
+        self.act = jax.nn.silu if cfg.mlp_kind == "swiglu" else jax.nn.gelu
+        self.dt = cfg.activation_dtype
+        self.pdt = cfg.weight_dtype
+        # The paper's stage-2 policy applied inside the experts:
+        self.shift_experts = cfg.policy.mlp in ("shift", "moe_primitives")
+        self.router = L.make_linear("dense", self.d, self.e, False,
+                                    jnp.float32, jnp.float32)
+        self.shared = None
+        if m.n_shared_experts:
+            self.shared = L.MLP(self.d, m.d_expert * m.n_shared_experts,
+                                cfg.mlp_kind,
+                                "shift" if self.shift_experts else "dense",
+                                cfg.use_bias, self.dt, self.pdt)
+
+    def init(self, key):
+        ks = jax.random.split(key, 5)
+        std = self.d ** -0.5
+        shape_up = (self.e, self.d, self.f)
+        shape_down = (self.e, self.f, self.d)
+        p = {
+            "router": self.router.init(ks[0]),
+            "up": (std * jax.random.truncated_normal(ks[1], -2, 2, shape_up)
+                   ).astype(self.pdt),
+            "down": ((self.f ** -0.5) * jax.random.truncated_normal(
+                ks[2], -2, 2, shape_down)).astype(self.pdt),
+        }
+        if self.gated:
+            p["gate"] = (std * jax.random.truncated_normal(ks[3], -2, 2, shape_up)
+                         ).astype(self.pdt)
+        if self.shared is not None:
+            p["shared"] = self.shared.init(ks[4])
+        return p
+
+    def spec(self, params):
+        s = {"router": L.match_linear_spec(params["router"],
+                                           L.linear_spec("embed", None)),
+             "up": ("experts", "embed", None),
+             "down": ("experts", None, "embed")}
+        if self.gated:
+            s["gate"] = ("experts", "embed", None)
+        if self.shared is not None:
+            s["shared"] = self.shared.spec(params["shared"])
+        return s
+
+    def _expert_w(self, w):
+        w = w.astype(self.dt) if not self.shift_experts else (
+            po2_quantize_ste(w).astype(self.dt))
+        return w
+
+    def __call__(self, params, x, train=True, rng=None):
+        from repro.distributed.sharding import constrain
+        from repro.nn.dispatch import combine, dispatch, group_tokens
+
+        xg, ungroup = group_tokens(x, self.d)
+        g, s, _ = xg.shape
+
+        logits = self.router(params["router"], xg.astype(jnp.float32))  # (G,S,E)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_vals, expert_idx = jax.lax.top_k(probs, self.k)             # (G,S,k)
+        gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)    # qwen3 norm_topk
+
+        cap = max(int(math.ceil(self.m.capacity_factor * s * self.k / self.e)), 1)
+        buf, daux = dispatch(xg, expert_idx, gate_vals, [cap] * self.e)
+
+        # (G, E, cap, d): groups shard over data, experts over model — the
+        # constraint below is where GSPMD inserts the EP all-to-all.
+        expert_in = buf.reshape(g, self.e, cap, self.d)
+        expert_in = constrain(expert_in, ("batch", "experts", None, None))
+        up = jnp.einsum("gecd,edf->gecf", expert_in, self._expert_w(params["up"]))
+        if self.gated:
+            up = self.act(jnp.einsum("gecd,edf->gecf", expert_in,
+                                     self._expert_w(params["gate"]))) * up
+        else:
+            up = self.act(up)
+        expert_out = jnp.einsum("gecf,efd->gecd", up, self._expert_w(params["down"]))
+        expert_out = constrain(expert_out, ("batch", "experts", None, None))
+
+        y = combine(expert_out.reshape(g, self.e * cap, self.d), daux, s, self.d)
+        y = ungroup(y)
+        if self.shared is not None:
+            y = y + self.shared(params["shared"], x)
+
+        # Switch-style load-balance aux + router z-loss.
+        frac = daux["tokens_per_expert"].astype(jnp.float32) / (g * s * self.k)
+        mean_prob = jnp.mean(probs, axis=(0, 1))                         # P_e
+        aux = {
+            "balance_loss": self.e * jnp.sum(frac * mean_prob)
+            + 1e-4 * jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1))),
+            "tokens_per_expert": daux["tokens_per_expert"],
+            "drop_fraction": daux["drop_fraction"],
+        }
+        return y, aux

@@ -1,0 +1,352 @@
+"""Attention-free sequence mixers: RG-LRU (Griffin/RecurrentGemma) and RWKV6.
+
+Per DESIGN.md §Arch-applicability the paper's *attention* reparameterization is
+inapplicable here (there is no Q·K MatMul to binarize — these recurrences are
+already additive linear-attention forms); the shift/MoE reparameterizations
+apply to every projection in these blocks and are wired through `make_linear`.
+
+Training uses `associative_scan` (RG-LRU, elementwise) or `lax.scan` over time
+(RWKV6 — the (d_k × d_v)-state recurrence); decode is a single-step update
+with O(1) state. Chunked RWKV6 is a §Perf candidate, not the baseline.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import layers as L
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU recurrent block (Griffin: conv → gated LRU, GeLU side branch)
+# ---------------------------------------------------------------------------
+
+_RGLRU_C = 8.0
+
+
+def _rglru_scan(a, b, h0=None):
+    """h_t = a_t * h_{t-1} + b_t via associative scan over time (axis 1)."""
+    if h0 is not None:
+        # Fold the initial state into the first step.
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+class RGLRUBlock:
+    """The full Griffin recurrent block: x → (linear → conv1d → RG-LRU) ⊙
+    gelu(linear) → out linear. Shapes: (B, N, d_model) → same."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+        d = cfg.d_model
+        self.dr = cfg.d_rnn or d
+        dt, pdt = cfg.activation_dtype, cfg.weight_dtype
+        lin = cfg.policy.proj_linear()
+        self.in_x = L.make_linear(lin, d, self.dr, cfg.use_bias, dt, pdt)
+        self.in_gate = L.make_linear(lin, d, self.dr, cfg.use_bias, dt, pdt)
+        self.out = L.make_linear(lin, self.dr, d, cfg.use_bias, dt, pdt)
+        self.conv = L.DWConv1D(self.dr, width=cfg.conv1d_width, causal=True,
+                               dtype=dt, param_dtype=pdt)
+        self.gate_r = L.make_linear("dense", self.dr, self.dr, True, dt, pdt)
+        self.gate_i = L.make_linear("dense", self.dr, self.dr, True, dt, pdt)
+        self.dt = dt
+
+    def init(self, key):
+        ks = jax.random.split(key, 7)
+        # Λ init so that a = exp(-c softplus(Λ) r) starts near 0.9..0.999.
+        lam = jax.random.uniform(ks[6], (self.dr,), jnp.float32, 0.3, 0.8)
+        lam = jnp.log(jnp.exp(-jnp.log(lam) / _RGLRU_C) - 1.0)  # inverse softplus
+        return {"in_x": self.in_x.init(ks[0]), "in_gate": self.in_gate.init(ks[1]),
+                "out": self.out.init(ks[2]), "conv": self.conv.init(ks[3]),
+                "gate_r": self.gate_r.init(ks[4]), "gate_i": self.gate_i.init(ks[5]),
+                "lambda": lam}
+
+    def spec(self, params):
+        return {
+            "in_x": L.match_linear_spec(params["in_x"], L.linear_spec("embed", "mlp")),
+            "in_gate": L.match_linear_spec(params["in_gate"], L.linear_spec("embed", "mlp")),
+            "out": L.match_linear_spec(params["out"], L.linear_spec("mlp", "embed")),
+            "conv": {"kernel": (None, "mlp"), "bias": ("mlp",)},
+            "gate_r": L.match_linear_spec(params["gate_r"], L.linear_spec("mlp", None, True)),
+            "gate_i": L.match_linear_spec(params["gate_i"], L.linear_spec("mlp", None, True)),
+            "lambda": ("mlp",),
+        }
+
+    def _gates(self, params, u):
+        r = jax.nn.sigmoid(self.gate_r(params["gate_r"], u).astype(jnp.float32))
+        i = jax.nn.sigmoid(self.gate_i(params["gate_i"], u).astype(jnp.float32))
+        log_a = -_RGLRU_C * jax.nn.softplus(params["lambda"].astype(jnp.float32)) * r
+        a = jnp.exp(log_a)
+        b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (
+            i * u.astype(jnp.float32))
+        return a, b
+
+    def __call__(self, params, x, positions=None, train=True):
+        gate = jax.nn.gelu(self.in_gate(params["in_gate"], x))
+        u = self.conv(params["conv"], self.in_x(params["in_x"], x))
+        a, b = self._gates(params, u)
+        h = _rglru_scan(a, b).astype(self.dt)
+        return self.out(params["out"], h * gate)
+
+    def init_cache(self, batch, max_len=None, dtype=jnp.bfloat16):
+        return {"h": jnp.zeros((batch, self.dr), jnp.float32),
+                "conv": jnp.zeros((batch, self.cfg.conv1d_width - 1, self.dr), dtype),
+                "pos": jnp.zeros((), jnp.int32)}
+
+    def decode_step(self, params, x_t, cache):
+        gate = jax.nn.gelu(self.in_gate(params["in_gate"], x_t))
+        ux = self.in_x(params["in_x"], x_t)
+        u, conv_state = self.conv.step(params["conv"], ux, cache["conv"])
+        a, b = self._gates(params, u)
+        h = a * cache["h"] + b
+        y = self.out(params["out"], h.astype(self.dt) * gate)
+        return y, {"h": h, "conv": conv_state, "pos": cache["pos"] + 1}
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 "Finch": data-dependent-decay time mix + squared-relu channel mix
+# ---------------------------------------------------------------------------
+
+def _token_shift(x):
+    """x_{t-1} with zero at t=0. x: (B, N, D)."""
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+
+class RWKV6TimeMix:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        d = cfg.d_model
+        self.hs = cfg.rwkv_head_size
+        assert d % self.hs == 0
+        self.h = d // self.hs
+        dt, pdt = cfg.activation_dtype, cfg.weight_dtype
+        lin = cfg.policy.proj_linear()
+        mk = lambda i, o: L.make_linear(lin, i, o, False, dt, pdt)
+        self.r_proj, self.k_proj, self.v_proj = mk(d, d), mk(d, d), mk(d, d)
+        self.g_proj, self.o_proj = mk(d, d), mk(d, d)
+        # Data-dependent decay LoRA (w = exp(-exp(w0 + tanh(x W1) W2))).
+        self.w_lora_dim = 64
+        self.w1 = L.make_linear("dense", d, self.w_lora_dim, False, dt, pdt)
+        self.w2 = L.make_linear("dense", self.w_lora_dim, d, False, dt, pdt)
+        self.dt = dt
+        # Beyond-paper §Perf option: chunked WKV (GLA-style) — N/C sequential
+        # steps of MXU-shaped chunk matmuls instead of N per-token state
+        # updates. See rwkv6_chunked below for the math + numerics envelope.
+        self.chunked = getattr(cfg, "rwkv_chunked", False)
+        self.chunk = 8
+
+    def init(self, key):
+        d = self.cfg.d_model
+        ks = jax.random.split(key, 8)
+        decay_speed = jnp.array(
+            [-6.0 + 5.0 * (i / max(d - 1, 1)) ** 0.9 for i in range(d)], jnp.float32)
+        return {
+            "r": self.r_proj.init(ks[0]), "k": self.k_proj.init(ks[1]),
+            "v": self.v_proj.init(ks[2]), "g": self.g_proj.init(ks[3]),
+            "o": self.o_proj.init(ks[4]), "w1": self.w1.init(ks[5]),
+            "w2": self.w2.init(ks[6]),
+            "w0": decay_speed,                                  # (D,)
+            "u": jnp.zeros((self.h, self.hs), jnp.float32),     # bonus
+            "mu": 0.5 * jnp.ones((5, d), jnp.float32),          # r,k,v,w,g lerps
+            "ln_scale": jnp.ones((d,), jnp.float32),            # per-head groupnorm
+            "ln_bias": jnp.zeros((d,), jnp.float32),
+        }
+
+    def spec(self, params):
+        s = {n: L.match_linear_spec(params[n], L.linear_spec("embed", "heads"))
+             for n in ("r", "k", "v", "g")}
+        s["o"] = L.match_linear_spec(params["o"], L.linear_spec("heads", "embed"))
+        s["w1"] = L.match_linear_spec(params["w1"], L.linear_spec("embed", None))
+        s["w2"] = L.match_linear_spec(params["w2"], L.linear_spec(None, "heads"))
+        s.update({"w0": ("heads",), "u": (None, None), "mu": (None, "heads"),
+                  "ln_scale": ("heads",), "ln_bias": ("heads",)})
+        return s
+
+    def _streams(self, params, x, x_prev):
+        """Token-shift lerp then project the 5 streams. x: (B, N, D)."""
+        sx = x_prev - x
+        mu = params["mu"].astype(x.dtype)
+        xr, xk, xv, xw, xg = (x + sx * mu[i] for i in range(5))
+        r = self.r_proj(params["r"], xr)
+        k = self.k_proj(params["k"], xk)
+        v = self.v_proj(params["v"], xv)
+        g = jax.nn.silu(self.g_proj(params["g"], xg))
+        lora = self.w2(params["w2"], jnp.tanh(self.w1(params["w1"], xw)))
+        logw = params["w0"].astype(jnp.float32) + lora.astype(jnp.float32)
+        w = jnp.exp(-jnp.exp(jnp.clip(logw, -8.0, 1.0)))          # decay in (0,1)
+        return r, k, v, g, w
+
+    def _heads(self, t):
+        b, n, d = t.shape
+        return t.reshape(b, n, self.h, self.hs)
+
+    def _group_norm(self, params, out):
+        """Per-head LayerNorm of the wkv output. out: (B, N, H, hs)."""
+        mean = jnp.mean(out, axis=-1, keepdims=True)
+        var = jnp.var(out, axis=-1, keepdims=True)
+        y = (out - mean) * jax.lax.rsqrt(var + 1e-5)
+        b, n = out.shape[:2]
+        y = y.reshape(b, n, -1)
+        return y * params["ln_scale"] + params["ln_bias"]
+
+    def __call__(self, params, x, positions=None, train=True):
+        b, n, d = x.shape
+        r, k, v, g, w = self._streams(params, x, _token_shift(x))
+        r, k, v = map(self._heads, (r, k, v))              # (B,N,H,hs)
+        w = self._heads(w.astype(jnp.float32))
+        u = params["u"].astype(jnp.float32)
+
+        if self.chunked and n % self.chunk == 0 and n > self.chunk:
+            out = rwkv6_chunked(r, k, v, w, u, chunk=self.chunk)
+        else:
+            def step(S, xs):
+                r_t, k_t, v_t, w_t = xs                    # (B,H,hs)
+                kv = k_t[..., :, None] * v_t[..., None, :]  # (B,H,hs,hs)
+                out_t = jnp.einsum("bhi,bhij->bhj", r_t, S + u[..., None] * kv)
+                S = w_t[..., None] * S + kv
+                return S, out_t
+
+            xs = tuple(t.transpose(1, 0, 2, 3).astype(jnp.float32)
+                       for t in (r, k, v, w))              # (N,B,H,hs)
+            S0 = jnp.zeros((b, self.h, self.hs, self.hs), jnp.float32)
+            _, out = jax.lax.scan(step, S0, xs)
+            out = out.transpose(1, 0, 2, 3)                # (B,N,H,hs)
+        out = self._group_norm(params, out).astype(self.dt)
+        return self.o_proj(params["o"], out * g)
+
+    def init_cache(self, batch, max_len=None, dtype=jnp.bfloat16):
+        return {"S": jnp.zeros((batch, self.h, self.hs, self.hs), jnp.float32),
+                "x_prev": jnp.zeros((batch, self.cfg.d_model), dtype),
+                "pos": jnp.zeros((), jnp.int32)}
+
+    def decode_step(self, params, x_t, cache):
+        x = x_t[:, None]
+        r, k, v, g, w = self._streams(params, x, cache["x_prev"][:, None])
+        r, k, v = (self._heads(t)[:, 0].astype(jnp.float32) for t in (r, k, v))
+        w = self._heads(w.astype(jnp.float32))[:, 0]
+        u = params["u"].astype(jnp.float32)
+        kv = k[..., :, None] * v[..., None, :]
+        out = jnp.einsum("bhi,bhij->bhj", r, cache["S"] + u[..., None] * kv)
+        S = w[..., None] * cache["S"] + kv
+        out = self._group_norm(params, out[:, None])[:, 0].astype(self.dt)
+        y = self.o_proj(params["o"], out * g[:, 0])
+        return y, {"S": S, "x_prev": x_t, "pos": cache["pos"] + 1}
+
+
+def rwkv6_chunked(r, k, v, w, u, chunk=8):
+    """Chunked WKV recurrence (GLA-style) — beyond-paper §Perf optimization.
+
+    Replaces the per-token scan (N sequential state updates of rank-1 math)
+    with N/C sequential steps of C×C / C×hs matmuls that feed the MXU.
+
+    Math per chunk (per head; state S ∈ (hs_k, hs_v); decays w_t ∈ (0,1)):
+        cum_t  = Σ_{s≤t} log w_s              (per k-channel, within chunk)
+        q̃_t    = r_t ⊙ exp(cum_{t-1})         (cum_0 ≡ 0)
+        k̃_j    = k_j ⊙ exp(-cum_j)
+        intra  : s_tj = q̃_t · k̃_j  (j < t);  diag: (r_t · (u ⊙ k_t)) v_t
+        out_t  = q̃_t @ S + Σ_{j<t} s_tj v_j + diag_t
+        S'     = exp(cum_C) ⊙ (S + k̃ᵀ V)      (row-wise over k-channels)
+
+    Numerics envelope: log w is clamped to [-8, 0) upstream, so with C=8 the
+    midpoint-centered factored exponents are bounded by C/2·8 = 32 < 45 (the
+    safety clip) — the factorization is exact over the whole representable
+    input range (pairwise exponents cum_{t-1} − cum_j are ≤ 0 by
+    construction; only the factoring could overflow, and it cannot here).
+
+    Shapes: r,k,v,w (B, N, H, hs); u (H, hs). Returns (B, N, H, hs) f32.
+    """
+    b, n, h, hs = r.shape
+    nc = n // chunk
+    f32 = jnp.float32
+
+    def to_chunks(t):
+        return (t.astype(f32).reshape(b, nc, chunk, h, hs)
+                .transpose(1, 0, 3, 2, 4))                 # (nc, B, H, C, hs)
+
+    rc, kc, vc, wc = map(to_chunks, (r, k, v, w))
+    logw = jnp.log(jnp.maximum(wc, 1e-8))                  # (nc,B,H,C,hs)
+    cum = jnp.cumsum(logw, axis=-2)                        # inclusive
+    cum_prev = cum - logw                                  # exclusive (cum_{t-1})
+    # Midpoint-center the factored exponents (m cancels pairwise) so each
+    # side's range halves before the ±30 safety clip.
+    m = cum[..., chunk // 2: chunk // 2 + 1, :]
+    qf = rc * jnp.exp(jnp.clip(cum_prev - m, -45.0, 45.0))     # q̃
+    kf = kc * jnp.exp(jnp.clip(m - cum, -45.0, 45.0))          # k̃
+    # inter-chunk q must NOT carry the -m centering: build it separately.
+    q_inter = rc * jnp.exp(jnp.clip(cum_prev, -60.0, 0.0))     # decays ≤ 1
+    # strict-lower-triangular mask (diag handled by the u bonus)
+    tri = jnp.tril(jnp.ones((chunk, chunk), f32), k=-1)
+    mask_decay = jnp.exp(jnp.clip(cum[..., -1:, :], -60.0, 0.0))  # exp(cum_C)
+
+    # k with decay measured from chunk end (for the state update; exponent
+    # cum_C - cum_j ≤ 0, never overflows).
+    k_end = kc * jnp.exp(jnp.clip(cum[..., -1:, :] - cum, -60.0, 0.0))
+
+    def step(S, xs):
+        q_i, k_i, v_i, kt_i, r_i, qS_i, kE_i, dC = xs
+        # inter-chunk: history state
+        out = jnp.einsum("bhck,bhkv->bhcv", qS_i, S)
+        # intra-chunk strict-causal
+        s = jnp.einsum("bhck,bhjk->bhcj", q_i, k_i) * tri
+        out += jnp.einsum("bhcj,bhjv->bhcv", s, v_i)
+        # diagonal bonus term
+        out += jnp.einsum("bhck,bhck->bhc", r_i, kt_i)[..., None] * v_i
+        # state update: S' = exp(cum_C) ⊙ S + Σ_j exp(cum_C - cum_j) k_j v_jᵀ
+        S = (dC[..., 0, :, None] * S
+             + jnp.einsum("bhjk,bhjv->bhkv", kE_i, v_i))
+        return S, out
+
+    u_kt = kc * u[None, None, :, None, :]                  # u ⊙ k per token
+    S0 = jnp.zeros((b, h, hs, hs), f32)
+    _, out = jax.lax.scan(step, S0, (qf, kf, vc, u_kt, rc, q_inter, k_end,
+                                     mask_decay))
+    return out.transpose(1, 0, 3, 2, 4).reshape(b, n, h, hs)
+
+
+class RWKV6ChannelMix:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        d, f = cfg.d_model, cfg.d_ff
+        dt, pdt = cfg.activation_dtype, cfg.weight_dtype
+        lin = cfg.policy.proj_linear()
+        self.k_proj = L.make_linear(lin, d, f, False, dt, pdt)
+        self.v_proj = L.make_linear(lin, f, d, False, dt, pdt)
+        self.r_proj = L.make_linear(lin, d, d, False, dt, pdt)
+
+    def init(self, key):
+        ks = jax.random.split(key, 3)
+        return {"k": self.k_proj.init(ks[0]), "v": self.v_proj.init(ks[1]),
+                "r": self.r_proj.init(ks[2]),
+                "mu": 0.5 * jnp.ones((2, self.cfg.d_model), jnp.float32)}
+
+    def spec(self, params):
+        return {"k": L.match_linear_spec(params["k"], L.linear_spec("embed", "mlp")),
+                "v": L.match_linear_spec(params["v"], L.linear_spec("mlp", "embed")),
+                "r": L.match_linear_spec(params["r"], L.linear_spec("embed", "heads")),
+                "mu": (None, "embed")}
+
+    def _forward(self, params, x, x_prev):
+        sx = x_prev - x
+        mu = params["mu"].astype(x.dtype)
+        xk = x + sx * mu[0]
+        xr = x + sx * mu[1]
+        k = jnp.square(jax.nn.relu(self.k_proj(params["k"], xk)))
+        return jax.nn.sigmoid(self.r_proj(params["r"], xr)) * self.v_proj(params["v"], k)
+
+    def __call__(self, params, x, positions=None, train=True):
+        return self._forward(params, x, _token_shift(x))
+
+    def init_cache(self, batch, max_len=None, dtype=jnp.bfloat16):
+        return {"x_prev": jnp.zeros((batch, self.cfg.d_model), dtype),
+                "pos": jnp.zeros((), jnp.int32)}
+
+    def decode_step(self, params, x_t, cache):
+        y = self._forward(params, x_t[:, None], cache["x_prev"][:, None])[:, 0]
+        return y, {"x_prev": x_t, "pos": cache["pos"] + 1}

@@ -1,0 +1,2 @@
+from repro.optim.optimizer import adamw, cosine_schedule, global_norm
+from repro.optim.compression import int8_error_feedback

@@ -1,0 +1,47 @@
+"""int8 error-feedback gradient compression (cross-pod reduce, DESIGN.md §3).
+
+Models the compressed data-parallel exchange: each gradient leaf is quantized
+to int8 with one fp32 scale before crossing the pod axis; the quantization
+residual is carried in an error-feedback buffer and added to the next step's
+gradient (Seide et al. '14 / DGC-style), which keeps convergence unbiased in
+the long run. Wire bytes drop 4× vs fp32 (2× vs bf16).
+
+Applied as a gradient transformation in the train step; the true in-collective
+form (quantize → int accumulate inside psum) lives in
+distributed.collectives.compressed_psum for shard_map regions and is
+exercised by tests/test_distributed.py on a multi-device mesh.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _trainable(x):
+    return jnp.issubdtype(x.dtype, jnp.inexact)
+
+
+def int8_error_feedback():
+    def init(params):
+        return jax.tree_util.tree_map(
+            lambda p: (jnp.zeros(p.shape, jnp.float32) if _trainable(p)
+                       else jnp.zeros((), jnp.float32)),
+            params)
+
+    def apply(grads, ef):
+        def one(g, e):
+            if not _trainable(g):
+                return g, e
+            x = g.astype(jnp.float32) + e
+            scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+            q = jnp.clip(jnp.round(x / scale), -127, 127)
+            deq = q * scale
+            return deq.astype(g.dtype), x - deq
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_e = treedef.flatten_up_to(ef)
+        out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+        return (treedef.unflatten([o[0] for o in out]),
+                treedef.unflatten([o[1] for o in out]))
+
+    return init, apply

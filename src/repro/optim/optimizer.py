@@ -1,0 +1,99 @@
+"""AdamW (decoupled weight decay) + warmup-cosine schedule + global-norm clip.
+
+Self-contained (no optax in the image). The optimizer is a (init, update)
+pair over arbitrary pytrees; moments are stored fp32 regardless of param
+dtype. int-dtype leaves (packed shift weights) are held frozen automatically.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def cosine_schedule(base_lr, warmup_steps, total_steps, final_frac=0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps) /
+                        jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup_steps, warm, base_lr * cos)
+
+    return lr
+
+
+def global_norm(tree):
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def _trainable(x):
+    return jnp.issubdtype(x.dtype, jnp.inexact)
+
+
+class AdamWState(NamedTuple):
+    count: jnp.ndarray
+    m: object
+    v: object
+
+
+@dataclasses.dataclass
+class Optimizer:
+    init: Callable
+    update: Callable
+
+
+def adamw(learning_rate, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.05,
+          clip_norm=1.0):
+    """learning_rate: float or schedule fn(step) -> lr."""
+    lr_fn = learning_rate if callable(learning_rate) else (lambda _: learning_rate)
+
+    def init(params):
+        zeros = lambda p: (jnp.zeros(p.shape, jnp.float32) if _trainable(p)
+                           else jnp.zeros((), jnp.float32))
+        return AdamWState(
+            count=jnp.zeros((), jnp.int32),
+            m=jax.tree_util.tree_map(zeros, params),
+            v=jax.tree_util.tree_map(zeros, params),
+        )
+
+    def update(grads, state, params):
+        count = state.count + 1
+        if clip_norm is not None:
+            gn = global_norm(grads)
+            scale = jnp.minimum(1.0, clip_norm / (gn + 1e-9))
+            grads = jax.tree_util.tree_map(
+                lambda g: (g.astype(jnp.float32) * scale) if _trainable(g) else g,
+                grads)
+        lr = lr_fn(count)
+        bc1 = 1 - b1 ** count.astype(jnp.float32)
+        bc2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            if not _trainable(p):
+                return p, m, v
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            mhat = m / bc1
+            vhat = v / bc2
+            step = mhat / (jnp.sqrt(vhat) + eps)
+            p32 = p.astype(jnp.float32)
+            new_p = p32 - lr * (step + weight_decay * p32)
+            return new_p.astype(p.dtype), m, v
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state.m)
+        flat_v = treedef.flatten_up_to(state.v)
+        out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_p, AdamWState(count=count, m=new_m, v=new_v)
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,1 @@
+from repro.serve.decode import make_serve_step, make_prefill_step, generate

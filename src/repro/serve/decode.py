@@ -1,0 +1,61 @@
+"""Serving: prefill + batched autoregressive decode.
+
+serve_step is the unit the decode dry-run cells lower: one new token against
+a persistent cache (dense KV / ring-buffer / MLA latent / O(1) linear-attn
+state — whichever the (arch, policy) pair dictates). `generate` is the
+minimal batched driver used by the serving example: greedy or temperature
+sampling, step-fused via jit with donated cache.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def make_prefill_step(model):
+    def prefill_step(params, batch):
+        logits, _ = model(params, batch["inputs"],
+                          positions=batch.get("positions"), train=False)
+        return logits
+
+    return prefill_step
+
+
+def make_serve_step(model):
+    def serve_step(params, inputs_t, cache):
+        return model.decode_step(params, inputs_t, cache)
+
+    return serve_step
+
+
+def generate(model, params, prompts, max_new_tokens, *, temperature=0.0,
+             rng=None, max_len=None):
+    """prompts: (B, P) int32. Returns (B, P+max_new_tokens) tokens.
+
+    Prompt tokens are fed through the decode path (cache warmup), then new
+    tokens are sampled autoregressively.
+    """
+    b, p = prompts.shape
+    max_len = max_len or (p + max_new_tokens)
+    cache = model.init_cache(b, max_len=max_len)
+    step = jax.jit(make_serve_step(model), donate_argnums=(2,))
+
+    logits = None
+    for t in range(p):
+        logits, cache = step(params, prompts[:, t], cache)
+
+    out = [prompts]
+    tok = None
+    for i in range(max_new_tokens):
+        if temperature <= 0.0:
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            rng, sub = jax.random.split(rng)
+            tok = jax.random.categorical(
+                sub, logits.astype(jnp.float32) / temperature).astype(jnp.int32)
+        out.append(tok[:, None])
+        if i + 1 < max_new_tokens:
+            logits, cache = step(params, tok, cache)
+    return jnp.concatenate(out, axis=1)

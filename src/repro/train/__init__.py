@@ -1,0 +1,2 @@
+from repro.train.step import make_train_step, make_eval_step, init_train_state
+from repro.train.loop import train_loop

@@ -1,0 +1,85 @@
+"""Training loop with checkpoint/restart fault tolerance and straggler
+monitoring. Failures (real exceptions or injected) roll the state back to the
+newest complete checkpoint and replay the deterministic data stream from
+there — the standard large-job recovery path, exercised end-to-end by
+tests/test_fault_tolerance.py.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.data.pipeline import shard_batch
+from repro.distributed.fault_tolerance import (
+    SimulatedFailure,
+    StepTimer,
+    StragglerMonitor,
+)
+from repro.train.step import init_train_state, make_train_step
+from repro.utils.logging import get_logger
+
+log = get_logger("repro.train")
+
+
+def train_loop(model, tcfg, data, *, mesh=None, checkpointer=None,
+               failure_injector=None, state=None, jit=True,
+               metrics_hook=None, max_restarts=8):
+    """Run tcfg.total_steps steps; returns (state, history).
+
+    data: object with .batch_at(step) (deterministic restart-replay).
+    """
+    key = jax.random.PRNGKey(tcfg.seed)
+    if state is None:
+        state = init_train_state(model, tcfg, key)
+    step_fn = make_train_step(model, tcfg)
+    if jit:
+        step_fn = jax.jit(step_fn, donate_argnums=(0,))
+
+    if checkpointer is not None:
+        restored = checkpointer.restore_latest(state)
+        if restored is not None:
+            start, state = restored
+            log.info("restored checkpoint at step %d", start)
+
+    monitor = StragglerMonitor()
+    history = []
+    restarts = 0
+    step = int(state["step"])
+    while step < tcfg.total_steps:
+        try:
+            if failure_injector is not None:
+                failure_injector.maybe_fail(step)
+            batch = shard_batch(data.batch_at(step), mesh)
+            with StepTimer() as t:
+                state, metrics = step_fn(state, batch)
+                jax.block_until_ready(metrics["loss"])
+            if monitor.record(step, t.seconds):
+                log.warning("straggler step %d: %.3fs", step, t.seconds)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            metrics["step"] = step
+            metrics["seconds"] = t.seconds
+            history.append(metrics)
+            if metrics_hook is not None:
+                metrics_hook(metrics)
+            step += 1
+            if checkpointer is not None and step % tcfg.checkpoint_every == 0:
+                checkpointer.save(step, state)
+        except SimulatedFailure as e:
+            restarts += 1
+            log.warning("failure at step %d (%s); restart %d", step, e, restarts)
+            if restarts > max_restarts:
+                raise
+            if checkpointer is None:
+                log.warning("no checkpointer; restarting from current state")
+                continue
+            checkpointer.wait()
+            restored = checkpointer.restore_latest(state)
+            if restored is None:
+                state = init_train_state(model, tcfg, key)
+                step = 0
+            else:
+                step, state = restored
+                step = int(step)
+            log.info("resumed from step %d", step)
+    if checkpointer is not None:
+        checkpointer.wait()
+    return state, history

@@ -1,0 +1,122 @@
+"""train_step / eval_step builders.
+
+Features wired here (DESIGN.md §3):
+- microbatched gradient accumulation (lax.scan over microbatches) — bounds
+  logits/activation memory for the 256k-vocab cells AND gives XLA per-
+  microbatch grad all-reduces to overlap with the next microbatch's compute;
+- optional int8 error-feedback gradient compression before the cross-pod
+  exchange;
+- λ·(L_IMP + L_LOAD) (paper Eq. 4) enters through model.loss.
+
+State is a plain dict {"params", "opt", "ef", "step"} so the checkpointer
+and shardings stay structural.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.compression import int8_error_feedback
+from repro.optim.optimizer import adamw, cosine_schedule
+
+
+def init_train_state(model, tcfg, key):
+    params = model.init(key)
+    opt = make_optimizer(tcfg)
+    state = {"params": params, "opt": opt.init(params),
+             "step": jnp.zeros((), jnp.int32)}
+    if tcfg.grad_compression == "int8_ef":
+        ef_init, _ = int8_error_feedback()
+        state["ef"] = ef_init(params)
+    return state
+
+
+def make_optimizer(tcfg):
+    sched = cosine_schedule(tcfg.learning_rate, tcfg.warmup_steps,
+                            tcfg.total_steps)
+    return adamw(sched, weight_decay=tcfg.weight_decay,
+                 clip_norm=tcfg.grad_clip_norm)
+
+
+def _split_microbatches(batch, n):
+    def split(x):
+        b = x.shape[0]
+        assert b % n == 0, (b, n)
+        return x.reshape(n, b // n, *x.shape[1:])
+
+    return jax.tree_util.tree_map(split, batch)
+
+
+def make_train_step(model, tcfg):
+    opt = make_optimizer(tcfg)
+    n_micro = tcfg.microbatch or 1
+    use_ef = tcfg.grad_compression == "int8_ef"
+    if use_ef:
+        _, ef_apply = int8_error_feedback()
+    cast_dtype = (model.cfg.activation_dtype
+                  if tcfg.cast_params == "compute_dtype" else None)
+
+    def loss_fn(params, mb):
+        if cast_dtype is not None:
+            # Cast before use so FSDP all-gathers move the compute dtype
+            # (bf16), not fp32 — and hoist out of the microbatch loop.
+            from repro.utils.tree import tree_cast
+
+            params = tree_cast(params, cast_dtype)
+        return model.loss(params, mb, train=True)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if n_micro == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            micro = _split_microbatches(batch, n_micro)
+
+            def constrain_grads(g):
+                if not tcfg.constrain_grad_acc:
+                    return g
+                from repro.distributed.sharding import constrain
+
+                spec = model.spec(params)
+                flat_g, treedef = jax.tree_util.tree_flatten(g)
+                flat_s = treedef.flatten_up_to(spec)
+                out = [constrain(gg, tuple(ss)) if isinstance(ss, tuple) else gg
+                       for gg, ss in zip(flat_g, flat_s)]
+                return treedef.unflatten(out)
+
+            def body(carry, mb):
+                g_acc, l_acc = carry
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(a.dtype), g_acc, g)
+                g_acc = constrain_grads(g_acc)
+                return (g_acc, l_acc + l), m
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), ms = jax.lax.scan(body, (g0, 0.0), micro)
+            grads = jax.tree_util.tree_map(lambda g: g / n_micro, grads)
+            loss = loss / n_micro
+            metrics = jax.tree_util.tree_map(lambda m: jnp.mean(m), ms)
+
+        new_state = dict(state)
+        if use_ef:
+            grads, new_ef = ef_apply(grads, state["ef"])
+            new_state["ef"] = new_ef
+        new_params, new_opt = opt.update(grads, state["opt"], params)
+        new_state.update(params=new_params, opt=new_opt,
+                         step=state["step"] + 1)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        return new_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model):
+    def eval_step(params, batch):
+        _, metrics = model.loss(params, batch, train=False)
+        return metrics
+
+    return eval_step

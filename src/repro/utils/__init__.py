@@ -1,0 +1,8 @@
+from repro.utils.tree import (
+    tree_size_bytes,
+    tree_num_params,
+    tree_cast,
+    tree_zeros_like,
+    named_flatten,
+)
+from repro.utils.logging import get_logger

@@ -1,0 +1,20 @@
+"""Minimal structured logging (single-process friendly, multi-host aware)."""
+from __future__ import annotations
+
+import logging
+import os
+import sys
+
+_FMT = "%(asctime)s %(levelname).1s %(name)s] %(message)s"
+
+
+def get_logger(name: str = "repro") -> logging.Logger:
+    logger = logging.getLogger(name)
+    if not logger.handlers:
+        handler = logging.StreamHandler(sys.stderr)
+        handler.setFormatter(logging.Formatter(_FMT, datefmt="%H:%M:%S"))
+        logger.addHandler(handler)
+        level = os.environ.get("REPRO_LOG_LEVEL", "INFO").upper()
+        logger.setLevel(getattr(logging, level, logging.INFO))
+        logger.propagate = False
+    return logger

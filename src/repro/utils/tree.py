@@ -1,0 +1,48 @@
+"""Pytree helpers used across the framework."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_num_params(tree) -> int:
+    """Total number of scalar parameters in a pytree."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return int(sum(np.prod(l.shape) if hasattr(l, "shape") else 1 for l in leaves))
+
+
+def tree_size_bytes(tree) -> int:
+    """Total nbytes of a pytree (works for ShapeDtypeStructs too)."""
+    total = 0
+    for l in jax.tree_util.tree_leaves(tree):
+        shape = getattr(l, "shape", ())
+        dtype = np.dtype(getattr(l, "dtype", np.float32))
+        total += int(np.prod(shape)) * dtype.itemsize
+    return total
+
+
+def tree_cast(tree, dtype):
+    """Cast every inexact-dtype leaf of a pytree to `dtype`."""
+
+    def _cast(x):
+        if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.inexact):
+            return x.astype(dtype)
+        return x
+
+    return jax.tree_util.tree_map(_cast, tree)
+
+
+def tree_zeros_like(tree):
+    return jax.tree_util.tree_map(jnp.zeros_like, tree)
+
+
+def named_flatten(tree, prefix=""):
+    """Flatten a nested-dict pytree into (dotted_name, leaf) pairs."""
+    out = []
+    if isinstance(tree, dict):
+        for k in sorted(tree.keys()):
+            out.extend(named_flatten(tree[k], f"{prefix}{k}." if prefix or True else k))
+    else:
+        out.append((prefix[:-1] if prefix.endswith(".") else prefix, tree))
+    return out

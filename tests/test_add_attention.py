@@ -1,0 +1,92 @@
+"""Binary linear attention math: chunked == naive oracle == decode steps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import add_attention as la
+from repro.kernels import ref
+
+
+def _data(b=2, h=3, n=64, dk=16, dv=20, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return (jax.random.normal(ks[0], (b, h, n, dk)),
+            jax.random.normal(ks[1], (b, h, n, dk)),
+            jax.random.normal(ks[2], (b, h, n, dv)))
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 64])
+def test_causal_chunked_matches_oracle(chunk):
+    q, k, v = _data()
+    out = la.binary_linear_attention(q, k, v, causal=True, chunk=chunk)
+    out_ref = ref.binary_linear_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_bidirectional_matches_oracle():
+    q, k, v = _data()
+    out = la.binary_linear_attention(q, k, v, causal=False)
+    out_ref = ref.binary_linear_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_decode_steps_match_chunked():
+    q, k, v = _data(n=32)
+    full = la.binary_linear_attention(q, k, v, causal=True, chunk=8)
+    state = la.init_decode_state(2, 3, 16, 20)
+    outs = []
+    for t in range(32):
+        o, state = la.binary_linear_attention_step(
+            q[:, :, t], k[:, :, t], v[:, :, t], state)
+        outs.append(o)
+    dec = jnp.stack(outs, axis=2)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_elu1_feature_matches_quadratic():
+    """The paper's plain linear-attention stage (elu+1 features)."""
+    q, k, v = _data(n=32)
+    out = la.binary_linear_attention(q, k, v, causal=True, chunk=8,
+                                     feature="elu1")
+    fq = jax.nn.elu(q) + 1
+    fk = jax.nn.elu(k) + 1
+    scores = jnp.einsum("bhnd,bhmd->bhnm", fq, fk) * jnp.tril(jnp.ones((32, 32)))
+    expect = jnp.einsum("bhnm,bhme->bhne", scores, v) / (
+        jnp.sum(scores, -1, keepdims=True) + 1e-6)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_attention_weights_nonnegative_normalized():
+    """Hamming-kernel property: implicit attention weights in [0,1], rows sum
+    to 1 ⇒ outputs are convex combinations of values (bounded by v extremes)."""
+    q, k, v = _data(n=48)
+    out = np.asarray(la.binary_linear_attention(q, k, v, causal=True, chunk=16))
+    vmax = np.asarray(v).max() + 1e-4
+    vmin = np.asarray(v).min() - 1e-4
+    assert out.max() <= vmax and out.min() >= vmin
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 3), st.integers(1, 3),
+       st.sampled_from([8, 24, 40]), st.sampled_from([4, 8, 12]))
+def test_chunked_oracle_property(b, h, n, d):
+    q, k, v = _data(b, h, n, d, d, seed=n * 7 + d)
+    out = la.binary_linear_attention(q, k, v, causal=True, chunk=8)
+    out_ref = ref.binary_linear_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_ref),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_ste_gradients_flow_to_qk():
+    q, k, v = _data(n=16)
+    gq, gk = jax.grad(
+        lambda q, k: jnp.sum(la.binary_linear_attention(q, k, v, causal=True,
+                                                        chunk=8) ** 2),
+        argnums=(0, 1))(q, k)
+    assert float(jnp.sum(jnp.abs(gq))) > 0
+    assert float(jnp.sum(jnp.abs(gk))) > 0

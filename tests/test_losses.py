@@ -1,0 +1,79 @@
+"""Latency-aware load-balancing loss (paper Eq. 4) properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import losses
+
+
+def test_scv_zero_for_uniform():
+    x = jnp.full((4,), 3.0)
+    assert float(losses.squared_coeff_variation(x)) < 1e-9
+
+
+def test_scv_scale_invariant():
+    x = jnp.asarray([1.0, 2.0, 3.0])
+    a = float(losses.squared_coeff_variation(x))
+    b = float(losses.squared_coeff_variation(10 * x))
+    assert a == pytest.approx(b, rel=1e-4)
+
+
+def test_latency_coefficients_normalized():
+    a = losses.latency_coefficients([1.0, 3.0])
+    np.testing.assert_allclose(np.asarray(a), [0.25, 0.75])
+
+
+def test_importance_loss_minimized_at_inverse_latency_split():
+    """α_i · Σp_i is uniform ⇔ gate mass ∝ 1/Lat — the paper's objective."""
+    lat = jnp.asarray([3.0, 1.0])
+    alpha = losses.latency_coefficients(lat)
+
+    def imp(frac_fast):
+        probs = jnp.stack([jnp.full((100,), 1 - frac_fast),
+                           jnp.full((100,), frac_fast)], -1)
+        return float(losses.importance_loss(probs, alpha))
+
+    # optimum: fast expert gets lat_slow/(lat_slow+lat_fast) = 0.75
+    assert imp(0.75) < imp(0.5) < imp(0.25)
+    assert imp(0.75) < 1e-9
+
+
+def test_smooth_top1_prob_bounds_and_direction():
+    logits = jnp.asarray([[2.0, 0.0], [0.0, 2.0], [1.0, 1.0]])
+    q = np.asarray(losses.smooth_top1_prob(logits, noise_std=1.0))
+    assert np.all(q >= 0) and np.all(q <= 1)
+    assert q[0, 0] > q[0, 1]
+    assert q[1, 1] > q[1, 0]
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 6), st.integers(4, 64))
+def test_losses_nonnegative_and_finite(n_exp, n_tok):
+    key = jax.random.PRNGKey(n_exp * 100 + n_tok)
+    logits = jax.random.normal(key, (n_tok, n_exp))
+    probs = jax.nn.softmax(logits, -1)
+    lat = jnp.abs(jax.random.normal(key, (n_exp,))) + 0.1
+    val = float(losses.latency_aware_moe_loss(logits, probs, lat))
+    assert np.isfinite(val) and val >= 0
+
+
+def test_loss_gradient_shifts_router_toward_fast_expert():
+    """Minimizing LL-loss from a uniform router must increase the fast
+    expert's gate mass (directional sanity of the whole mechanism)."""
+    lat = jnp.asarray([4.0, 1.0])
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (64, 8))
+    w = jnp.zeros((8, 2))
+
+    def loss(w):
+        logits = x @ w
+        probs = jax.nn.softmax(logits, -1)
+        return losses.latency_aware_moe_loss(logits, probs, lat)
+
+    for _ in range(50):
+        w = w - 0.5 * jax.grad(loss)(w)
+    probs = jax.nn.softmax(x @ w, -1)
+    mass = np.asarray(jnp.mean(probs, 0))
+    assert mass[1] > mass[0], mass  # fast expert favored

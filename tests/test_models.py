@@ -1,0 +1,130 @@
+"""Per-architecture smoke tests (assignment: reduced config of the same
+family, one forward/train step on CPU, output shapes + no NaNs) plus
+decode-vs-prefill equivalence for every causal family.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, MLAConfig, MoEConfig
+from repro.configs.registry import get_config, list_archs
+from repro.core.policy import SHIFTADD
+from repro.nn.model import LanguageModel
+
+
+def _batch(cfg, b=2, n=16, seed=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    if cfg.input_mode == "tokens":
+        inputs = jax.random.randint(k1, (b, n), 0, cfg.vocab_size)
+    else:
+        inputs = jax.random.normal(k1, (b, n, cfg.d_model))
+    labels = jax.random.randint(k2, (b, n), 0, cfg.vocab_size)
+    return {"inputs": inputs, "labels": labels}
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_arch_smoke_forward_and_train_step(arch):
+    cfg = get_config(arch, reduced=True)
+    model = LanguageModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    logits, aux = model(params, batch["inputs"], train=False)
+    assert logits.shape == (2, 16, cfg.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(logits))), f"{arch}: NaN logits"
+    (loss, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(
+        params, batch)
+    assert np.isfinite(float(loss)), f"{arch}: loss {loss}"
+    gsum = sum(float(jnp.sum(jnp.abs(g.astype(jnp.float32))))
+               for g in jax.tree_util.tree_leaves(grads))
+    assert np.isfinite(gsum) and gsum > 0
+
+
+@pytest.mark.parametrize("arch", [a for a in list_archs()
+                                  if get_config(a, reduced=True).causal])
+def test_arch_decode_matches_prefill(arch):
+    cfg = get_config(arch, reduced=True)
+    if cfg.moe is not None:
+        cfg = cfg.replace(moe=MoEConfig(
+            n_experts=cfg.moe.n_experts, top_k=cfg.moe.top_k,
+            d_expert=cfg.moe.d_expert, capacity_factor=16.0))
+    model = LanguageModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    logits, _ = model(params, batch["inputs"], train=False)
+    cache = model.init_cache(2, max_len=16)
+    outs = []
+    for t in range(16):
+        lg, cache = model.decode_step(params, batch["inputs"][:, t], cache)
+        outs.append(lg)
+    dec = jnp.stack(outs, 1)
+    err = float(jnp.max(jnp.abs(dec - logits)))
+    scale = float(jnp.std(logits)) + 1e-6
+    assert err < 0.05 * max(scale, 1.0) + 0.02, f"{arch}: decode err {err}"
+
+
+@pytest.mark.parametrize("arch", ["yi-9b", "rwkv6-3b", "minicpm3-4b",
+                                  "qwen3-moe-30b-a3b", "hubert-xlarge"])
+def test_arch_shiftadd_policy_applies(arch):
+    """The paper's policy must produce a working model on every family it
+    applies to (attention-free archs keep shift/MoE only — DESIGN.md §5)."""
+    cfg = get_config(arch, reduced=True, policy="shiftadd").replace(
+        moe_primitives_capacity=4.0)
+    model = LanguageModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    (loss, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(
+        params, batch)
+    assert np.isfinite(float(loss))
+    # Shift-reparameterized params exist (w_latent leaves).
+    from repro.core.reparam import count_reparameterized
+    counts = count_reparameterized(params)
+    assert counts["shift_latent"] > 0
+
+
+def test_scan_vs_unrolled_equivalence():
+    base = dict(n_layers=4, d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+                vocab_size=31, dtype="float32", remat="none")
+    cfg_s = ModelConfig(name="t", family="dense", scan_layers=True, **base)
+    cfg_u = ModelConfig(name="t", family="dense", scan_layers=False, **base)
+    m_s, m_u = LanguageModel(cfg_s), LanguageModel(cfg_u)
+    params = m_s.init(jax.random.PRNGKey(0))
+    x = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, 31)
+    l_s, _ = m_s(params, x, train=False)
+    l_u, _ = m_u(params, x, train=False)
+    np.testing.assert_allclose(np.asarray(l_s), np.asarray(l_u),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_remat_preserves_values_and_grads():
+    base = dict(n_layers=2, d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+                vocab_size=31, dtype="float32", scan_layers=True)
+    cfg_n = ModelConfig(name="t", family="dense", remat="none", **base)
+    cfg_r = ModelConfig(name="t", family="dense", remat="full", **base)
+    m_n, m_r = LanguageModel(cfg_n), LanguageModel(cfg_r)
+    params = m_n.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg_n, n=8)
+    (l_n, _), g_n = jax.value_and_grad(m_n.loss, has_aux=True)(params, batch)
+    (l_r, _), g_r = jax.value_and_grad(m_r.loss, has_aux=True)(params, batch)
+    assert float(abs(l_n - l_r)) < 1e-5
+    for a, b in zip(jax.tree_util.tree_leaves(g_n),
+                    jax.tree_util.tree_leaves(g_r)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_sliding_window_masks_long_range():
+    """A token outside the window must not influence attention output."""
+    cfg = ModelConfig(name="t", family="hybrid", n_layers=1, d_model=32,
+                      n_heads=2, n_kv_heads=1, d_ff=64, vocab_size=31,
+                      block_pattern=("local_attn",), window=4,
+                      dtype="float32", scan_layers=False, remat="none")
+    model = LanguageModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    x1 = jax.random.randint(jax.random.PRNGKey(1), (1, 12), 0, 31)
+    x2 = x1.at[0, 0].set((x1[0, 0] + 7) % 31)  # mutate a distant token
+    l1, _ = model(params, x1, train=False)
+    l2, _ = model(params, x2, train=False)
+    # positions ≥ 5 can't see position 0 (window 4)
+    np.testing.assert_allclose(np.asarray(l1[0, 6:]), np.asarray(l2[0, 6:]),
+                               rtol=1e-5, atol=1e-5)

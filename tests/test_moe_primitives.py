@@ -1,0 +1,108 @@
+"""Heterogeneous MoE: latency-aware capacities, dispatch conservation, LL-loss."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import losses
+from repro.core.moe_primitives import MoEPrimitives
+
+
+def _moe(**kw):
+    kw.setdefault("capacity_factor", 8.0)
+    return MoEPrimitives(16, 32, **kw)
+
+
+def test_latency_aware_capacities_favor_fast_expert():
+    moe = _moe(capacity_factor=1.0)
+    caps = moe.capacities(100)
+    # Shift is faster (1 B/weight) ⇒ larger capacity than Mult.
+    assert moe.latencies[1] < moe.latencies[0]
+    assert caps[1] > caps[0]
+
+
+def test_uniform_capacities_when_not_latency_aware():
+    moe = _moe(capacity_factor=1.0, latency_aware=False)
+    caps = moe.capacities(100)
+    assert caps[0] == caps[1]
+
+
+def test_dispatch_conservation_no_drop():
+    """With ample capacity every token is processed by exactly its top-1
+    expert: output equals running the chosen expert per token."""
+    moe = _moe()
+    params = moe.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (30, 16))
+    y, aux = moe(params, x, train=False)
+    assert float(aux["drop_fraction"]) == 0.0
+    top1 = np.asarray(aux["top1"])
+    probs = np.asarray(aux["probs"])
+    for t in range(30):
+        e = int(top1[t])
+        out_e = moe.experts[e](params["experts"][e], x[t][None])[0]
+        expect = probs[t, e] * np.asarray(out_e)
+        np.testing.assert_allclose(np.asarray(y[t]), expect, rtol=2e-3,
+                                   atol=2e-3)
+
+
+def test_drop_accounting_under_tight_capacity():
+    moe = _moe(capacity_factor=0.2)
+    params = moe.init(jax.random.PRNGKey(0))
+    # 60 tokens: not a multiple of 32 ⇒ a single routing group, so the
+    # global-capacity accounting below is exact.
+    x = jax.random.normal(jax.random.PRNGKey(1), (60, 16))
+    y, aux = moe(params, x, train=False)
+    kept = sum(min(int(c), int(t)) for c, t in
+               zip(aux["capacities"], aux["tokens_per_expert"]))
+    assert float(aux["drop_fraction"]) == pytest.approx(1 - kept / 60, abs=1e-6)
+
+
+def test_balance_loss_differentiable_and_orders():
+    """LL-loss must be lower for a router matching the latency-aware target
+    split than for one inverting it."""
+    lat = jnp.asarray([3.0, 1.0])  # expert 1 is 3x faster
+    alpha = losses.latency_coefficients(lat)
+    n = 4000
+    key = jax.random.PRNGKey(0)
+
+    def loss_for(frac_to_fast):
+        # logits strongly favoring expert 1 for frac of tokens
+        r = jax.random.uniform(key, (n,))
+        sel = (r < frac_to_fast).astype(jnp.float32)
+        logits = jnp.stack([(1 - sel) * 4.0, sel * 4.0], -1)
+        probs = jax.nn.softmax(logits, -1)
+        return float(losses.latency_aware_moe_loss(logits, probs, lat))
+
+    matched = loss_for(0.75)    # fast expert gets 3/4 — matches 1/Lat
+    inverted = loss_for(0.25)
+    assert matched < inverted
+
+
+def test_moe_grads_reach_router_and_both_experts():
+    moe = _moe()
+    params = moe.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (40, 16))
+
+    def loss(p):
+        y, aux = moe(p, x, train=False)
+        return jnp.sum(y ** 2) * 1e-3 + aux["balance_loss"]
+
+    g = jax.grad(loss)(params)
+    assert float(jnp.sum(jnp.abs(g["router"]["kernel"]))) > 0
+    for ge in g["experts"]:
+        total = sum(float(jnp.sum(jnp.abs(l))) for l in
+                    jax.tree_util.tree_leaves(ge))
+        assert total > 0
+
+
+def test_custom_experts_and_latencies():
+    from repro.nn.layers import MLP
+
+    experts = [MLP(16, 32, "swiglu", "dense"), MLP(16, 32, "swiglu", "shift")]
+    moe = MoEPrimitives(16, 32, experts=experts, latencies=[2e-5, 1e-5],
+                        capacity_factor=4.0)
+    params = moe.init(jax.random.PRNGKey(0))
+    y, aux = moe(params, jax.random.normal(jax.random.PRNGKey(1), (12, 16)))
+    assert y.shape == (12, 16)
+    np.testing.assert_allclose(np.asarray(aux["alpha"]),
+                               [2 / 3, 1 / 3], rtol=1e-5)

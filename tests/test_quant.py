@@ -1,0 +1,87 @@
+"""Unit + property tests for the multiplication-primitive quantizers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant
+
+
+def test_po2_pack_roundtrip():
+    w = jax.random.normal(jax.random.PRNGKey(0), (64, 32)) * 0.1
+    s, p = quant.po2_quantize(w)
+    s2, p2 = quant.unpack_po2(quant.pack_po2(s, p))
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(s2))
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(p2))
+
+
+def test_exponent_assembly_bitexact():
+    """The bf16 exponent-bit construction must equal sign * 2^P exactly."""
+    p = jnp.arange(quant.P_MIN, quant.P_MAX + 1, dtype=jnp.int32)
+    for sign_val in (1.0, -1.0):
+        s = jnp.full(p.shape, sign_val)
+        packed = quant.pack_po2(s, p)
+        w = quant.po2_weight_from_packed(packed, jnp.float32)
+        ref = quant.po2_value(s, p, jnp.float32)
+        np.testing.assert_array_equal(np.asarray(w), np.asarray(ref))
+
+
+def test_po2_nearest_power():
+    w = jnp.asarray([0.9, 1.1, 2.7, 3.1, -0.26, -0.24])
+    s, p = quant.po2_quantize(w)
+    v = np.asarray(quant.po2_value(s, p))
+    # log-domain rounding: |w| -> 2^round(log2|w|)
+    assert v[0] == 1.0 and v[1] == 1.0
+    assert v[2] == 2.0   # log2(2.7)=1.43 -> 1
+    assert v[3] == 4.0   # log2(3.1)=1.63 -> 2
+    assert v[4] == -0.25 and v[5] == -0.25
+
+
+def test_ste_gradient_passthrough():
+    w = jnp.asarray([0.3, -0.7, 1.9])
+    g = jax.grad(lambda x: jnp.sum(quant.po2_quantize_ste(x) * 2.0))(w)
+    np.testing.assert_allclose(np.asarray(g), 2.0)
+    gb = jax.grad(lambda x: jnp.sum(quant.binarize_ste(x) * 3.0))(w)
+    assert np.all(np.isfinite(np.asarray(gb)))
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(min_value=-1e6, max_value=1e6,
+                          allow_nan=False, allow_infinity=False,
+                          # XLA:CPU flushes subnormals in comparisons while
+                          # numpy doesn't; subnormal weights clamp to ±2^-64
+                          # anyway, so they're out of scope for the property.
+                          allow_subnormal=False,
+                          width=32), min_size=1, max_size=64))
+def test_po2_quantize_within_factor_sqrt2(vals):
+    """Property: po2 quantization error is bounded by a factor of sqrt(2)
+    in magnitude (for values inside the representable P range)."""
+    w = jnp.asarray(vals, jnp.float32)
+    s, p = quant.po2_quantize(w)
+    v = np.asarray(quant.po2_value(s, p), np.float64)
+    aw = np.abs(np.asarray(w, np.float64))
+    mask = (aw > 2.0 ** quant.P_MIN) & (aw < 2.0 ** quant.P_MAX)
+    ratio = np.abs(v[mask]) / aw[mask]
+    assert np.all(ratio <= np.sqrt(2) + 1e-3)
+    assert np.all(ratio >= 1 / np.sqrt(2) - 1e-3)
+    # sign always preserved
+    nz = np.asarray(w) != 0
+    assert np.all(np.sign(v[nz]) == np.sign(np.asarray(w)[nz]))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=1, max_value=8), st.integers(min_value=1, max_value=8))
+def test_pack_shape_preserved(m, n):
+    w = jax.random.normal(jax.random.PRNGKey(m * 31 + n), (m, n))
+    packed = quant.pack_from_dense(w)
+    assert packed.shape == (m, n)
+    assert packed.dtype == jnp.int8
+
+
+def test_binarize_scales():
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 16)) * 3.0
+    b, scale = quant.binarize(x)
+    assert np.allclose(float(scale), float(jnp.mean(jnp.abs(x))))
+    bb = np.asarray(b)
+    assert set(np.unique(bb)).issubset({-1.0, 1.0})

@@ -1,0 +1,62 @@
+"""Chunked RWKV6 (beyond-paper §Perf): must match the per-token scan exactly
+across the whole admissible decay range (logw ∈ [-8, 0))."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.nn.model import LanguageModel
+from repro.nn.recurrent import rwkv6_chunked
+
+
+def _scan_ref(r, k, v, w, u):
+    hs = r.shape[-1]
+
+    def step(S, xs):
+        r_t, k_t, v_t, w_t = xs
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        out_t = jnp.einsum("bhi,bhij->bhj", r_t, S + u[..., None] * kv)
+        S = w_t[..., None] * S + kv
+        return S, out_t
+
+    xs = tuple(t.transpose(1, 0, 2, 3) for t in (r, k, v, w))
+    S0 = jnp.zeros((r.shape[0], r.shape[2], hs, hs))
+    _, out = jax.lax.scan(step, S0, xs)
+    return out.transpose(1, 0, 2, 3)
+
+
+@pytest.mark.parametrize("decay_shift", [-1.0, 0.8, 2.2])
+@pytest.mark.parametrize("n", [16, 64, 128])
+def test_chunked_matches_scan(decay_shift, n):
+    b, h, hs = 2, 3, 8
+    ks = jax.random.split(jax.random.PRNGKey(int(decay_shift * 10) + n), 5)
+    r = jax.random.normal(ks[0], (b, n, h, hs))
+    k = jax.random.normal(ks[1], (b, n, h, hs))
+    v = jax.random.normal(ks[2], (b, n, h, hs))
+    logw = -jnp.exp(jax.random.normal(ks[3], (b, n, h, hs)) + decay_shift)
+    w = jnp.exp(jnp.clip(logw, -8.0, -1e-4))
+    u = jax.random.normal(ks[4], (h, hs)) * 0.5
+    ref = _scan_ref(r, k, v, w, u)
+    out = rwkv6_chunked(r, k, v, w, u)
+    err = float(jnp.max(jnp.abs(out - ref)) / (jnp.std(ref) + 1e-9))
+    assert err < 2e-3, err
+
+
+def test_model_level_chunked_equivalence():
+    base = dict(name="t", family="ssm", n_layers=2, d_model=64, n_heads=2,
+                n_kv_heads=2, d_ff=128, vocab_size=64,
+                block_pattern=("rwkv6",), rope="none", norm="layernorm",
+                dtype="float32", scan_layers=False, remat="none")
+    m_scan = LanguageModel(ModelConfig(**base))
+    m_chunk = LanguageModel(ModelConfig(rwkv_chunked=True, **base))
+    params = m_scan.init(jax.random.PRNGKey(0))
+    x = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, 64)
+    l1, _ = m_scan(params, x, train=False)
+    l2, _ = m_chunk(params, x, train=False)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                               rtol=2e-4, atol=2e-4)
+    # gradients flow through the chunked path
+    g = jax.grad(lambda p: m_chunk.loss(p, {"inputs": x, "labels": x})[0])(params)
+    total = sum(float(jnp.sum(jnp.abs(l))) for l in jax.tree_util.tree_leaves(g))
+    assert np.isfinite(total) and total > 0

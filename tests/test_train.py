@@ -1,0 +1,103 @@
+"""Training-step semantics: microbatch equivalence, compression convergence,
+optimizer behavior, frozen packed weights."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.data.pipeline import SyntheticLMData
+from repro.nn.model import LanguageModel
+from repro.optim.optimizer import adamw, cosine_schedule, global_norm
+from repro.train.step import init_train_state, make_train_step
+
+
+def _setup(**tkw):
+    cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=32,
+                      n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=64,
+                      dtype="float32", scan_layers=True, remat="none")
+    t = dict(learning_rate=1e-3, warmup_steps=2, total_steps=50,
+             global_batch=8, seq_len=16)
+    t.update(tkw)
+    tcfg = TrainConfig(**t)
+    model = LanguageModel(cfg)
+    data = SyntheticLMData(cfg.vocab_size, tcfg.seq_len, tcfg.global_batch,
+                           seed=1)
+    return model, tcfg, data
+
+
+def test_microbatch_equivalence():
+    """Gradient accumulation over 4 microbatches == single big batch."""
+    model, tcfg1, data = _setup(microbatch=None)
+    _, tcfg4, _ = _setup(microbatch=4)
+    state = init_train_state(model, tcfg1, jax.random.PRNGKey(0))
+    batch = {k: jnp.asarray(v) for k, v in data.batch_at(0).items()}
+    s1, m1 = make_train_step(model, tcfg1)(state, batch)
+    state2 = init_train_state(model, tcfg4, jax.random.PRNGKey(0))
+    s4, m4 = make_train_step(model, tcfg4)(state2, batch)
+    assert abs(float(m1["loss"]) - float(m4["loss"])) < 1e-5
+    for a, b in zip(jax.tree_util.tree_leaves(s1["params"]),
+                    jax.tree_util.tree_leaves(s4["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-5)
+
+
+def test_int8_ef_compression_converges_close_to_uncompressed():
+    model, tcfg, data = _setup(total_steps=40, learning_rate=3e-3)
+    _, tcfg_c, _ = _setup(total_steps=40, learning_rate=3e-3,
+                          grad_compression="int8_ef")
+
+    def run(tc):
+        state = init_train_state(model, tc, jax.random.PRNGKey(0))
+        step = jax.jit(make_train_step(model, tc))
+        for i in range(tc.total_steps):
+            batch = {k: jnp.asarray(v) for k, v in data.batch_at(i).items()}
+            state, metrics = step(state, batch)
+        return float(metrics["loss"])
+
+    base = run(tcfg)
+    comp = run(tcfg_c)
+    assert comp < base + 0.25, (base, comp)
+
+
+def test_adamw_decoupled_weight_decay():
+    opt = adamw(0.1, weight_decay=0.5, clip_norm=None)
+    params = {"w": jnp.ones((4,))}
+    state = opt.init(params)
+    new_p, _ = opt.update({"w": jnp.zeros((4,))}, state, params)
+    # zero grad ⇒ pure decay: p - lr*wd*p
+    np.testing.assert_allclose(np.asarray(new_p["w"]), 1 - 0.1 * 0.5,
+                               rtol=1e-6)
+
+
+def test_grad_clipping():
+    opt = adamw(1e-3, weight_decay=0.0, clip_norm=1.0)
+    params = {"w": jnp.zeros((4,))}
+    state = opt.init(params)
+    big = {"w": jnp.full((4,), 100.0)}
+    _, st = opt.update(big, state, params)
+    assert float(global_norm(st.m)) <= (1 - 0.9) * 1.0 + 1e-5
+
+
+def test_cosine_schedule_shape():
+    s = cosine_schedule(1.0, warmup_steps=10, total_steps=100)
+    assert float(s(0)) == 0.0
+    assert float(s(10)) == pytest.approx(1.0, rel=1e-3)
+    assert float(s(100)) == pytest.approx(0.1, rel=1e-2)
+    assert float(s(55)) < float(s(20))
+
+
+def test_packed_weights_frozen_under_optimizer():
+    """int-dtype leaves (deployment shift weights) must not be updated."""
+    from repro.core.shift_linear import ShiftLinear
+
+    sl = ShiftLinear(8, 4, mode="packed")
+    params = {"lin": sl.init(jax.random.PRNGKey(0))}
+    opt = adamw(0.1)
+    state = opt.init(params)
+    grads = jax.tree_util.tree_map(
+        lambda p: jnp.ones_like(p) if jnp.issubdtype(p.dtype, jnp.inexact)
+        else p, params)
+    new_p, _ = opt.update(grads, state, params)
+    np.testing.assert_array_equal(np.asarray(new_p["lin"]["w_packed"]),
+                                  np.asarray(params["lin"]["w_packed"]))
