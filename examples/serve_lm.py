@@ -20,7 +20,7 @@ import numpy as np
 
 from repro.configs.registry import get_config
 from repro.nn.model import LanguageModel
-from repro.serve.decode import make_serve_step
+from repro.serve.decode import make_prefill, make_serve_step
 
 
 def main():
@@ -67,14 +67,17 @@ def main():
     for row in range(b):
         cache, _ = refill(row, cache)
 
-    # feed prompts (row-synchronous for simplicity; rows with shorter prompts
-    # re-feed their last token — fine for a demo scheduler)
+    # consume prompts in ONE parallel chunked prefill pass (row-synchronous:
+    # rows with shorter prompts re-feed their last token — fine for a demo
+    # scheduler, and identical to what a per-token warmup loop would feed)
     max_prompt = max(len(q) for q in queue)
-    logits = None
-    for t in range(max_prompt):
-        tok = jnp.asarray([buffers[r][min(t, len(buffers[r]) - 1)]
-                           for r in range(b)], jnp.int32)
-        logits, cache = step(params, tok, cache)
+    prompt_mat = jnp.asarray(
+        [[buffers[r][min(t, len(buffers[r]) - 1)] if buffers[r] else 0
+          for t in range(max_prompt)]
+         for r in range(b)], jnp.int32)
+    prefill = jax.jit(make_prefill(model), donate_argnums=(2,))
+    logits_all, cache = prefill(params, prompt_mat, cache)
+    logits = logits_all[:, -1]
 
     while any(a is not None for a in active):
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)

@@ -49,10 +49,19 @@ def _featurize(q, k, feature="binary"):
 
 
 def binary_linear_attention(q, k, v, *, causal=False, chunk=128, train=True,
-                            feature="binary"):
-    """q, k: (B, H, N, Dk); v: (B, H, N, Dv) → (B, H, N, Dv)."""
+                            feature="binary", return_state=False):
+    """q, k: (B, H, N, Dk); v: (B, H, N, Dv) → (B, H, N, Dv).
+
+    With return_state=True (causal only) also returns the final recurrent
+    carry {"kv", "ksum", "vsum", "count"} in the init_decode_state layout —
+    the chunked-prefill handoff into the O(1) decode path.
+    """
     if causal:
-        return _causal_chunked(q, k, v, chunk=chunk, train=train, feature=feature)
+        return _causal_chunked(q, k, v, chunk=chunk, train=train,
+                               feature=feature, return_state=return_state)
+    if return_state:
+        raise ValueError("return_state requires causal=True (there is no "
+                         "recurrent carry in the bidirectional form)")
     return _bidirectional(q, k, v, train=train, feature=feature)
 
 
@@ -67,7 +76,8 @@ def _bidirectional(q, k, v, train=True, feature="binary"):
     return num / (den[..., None] + 1e-6)
 
 
-def _causal_chunked(q, k, v, *, chunk=128, train=True, feature="binary"):
+def _causal_chunked(q, k, v, *, chunk=128, train=True, feature="binary",
+                    return_state=False):
     b, h, n, dk_dim = q.shape
     dv = v.shape[-1]
     if n % chunk != 0:
@@ -77,6 +87,14 @@ def _causal_chunked(q, k, v, *, chunk=128, train=True, feature="binary"):
         v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
     nc = q.shape[-2] // chunk
     bq, bk, dk = _featurize(q, k, feature)
+    if q.shape[-2] != n:
+        # Padded key positions would featurize to nonzero codes (sign(0)=+1,
+        # elu(0)+1=1) and poison the carry; zero them out. Valid outputs are
+        # untouched (padding is strictly in the causal future of every real
+        # position), so this is safe unconditionally.
+        valid = (jnp.arange(q.shape[-2]) < n).astype(q.dtype)[None, None, :, None]
+        bk = bk * valid
+        v = v * valid
 
     # (nc, B, H, chunk, D) chunked views for scan.
     def to_chunks(x):
@@ -112,9 +130,15 @@ def _causal_chunked(q, k, v, *, chunk=128, train=True, feature="binary"):
         jnp.zeros((b, h, dv), q.dtype),
         jnp.asarray(0.0, q.dtype),
     )
-    _, out = jax.lax.scan(step, carry, (bq_c, bk_c, v_c))
+    (kv_f, ksum_f, vsum_f, _), out = jax.lax.scan(step, carry, (bq_c, bk_c, v_c))
     out = out.transpose(1, 2, 0, 3, 4).reshape(b, h, nc * chunk, dv)
-    return out[:, :, :n]
+    out = out[:, :, :n]
+    if not return_state:
+        return out
+    # count is the number of *real* tokens (the scan's cnt includes padding).
+    state = {"kv": kv_f, "ksum": ksum_f, "vsum": vsum_f,
+             "count": jnp.asarray(float(n), q.dtype)}
+    return out, state
 
 
 def init_decode_state(batch, heads, dk, dv, dtype=jnp.float32):

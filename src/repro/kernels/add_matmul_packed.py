@@ -16,6 +16,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
+from repro.kernels.tpu_compat import CompilerParams as _CompilerParams
+
 
 BM, BN, BK8 = 128, 128, 64          # BK8 packed rows = 512 logical K rows
 
@@ -74,7 +76,7 @@ def add_matmul_packed_pallas(x, packed, *, bm=BM, bn=BN, bk8=BK8,
         out_specs=pl.BlockSpec((1, bm, bn), lambda gg, i, j, kk: (gg, i, j)),
         out_shape=jax.ShapeDtypeStruct((g, m, n), x.dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

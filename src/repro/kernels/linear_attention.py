@@ -27,12 +27,18 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
+from repro.kernels.tpu_compat import CompilerParams as _CompilerParams
+
 
 CHUNK = 256
 
 
-def _make_kernel(dk_true: int, chunk: int):
-    def kernel(q_ref, k_ref, v_ref, o_ref, kv_ref, ksum_ref, vsum_ref):
+def _make_kernel(dk_true: int, chunk: int, n_true: int, return_state: bool):
+    def kernel(q_ref, k_ref, v_ref, o_ref, *rest):
+        if return_state:
+            kv_out, ksum_out, vsum_out, kv_ref, ksum_ref, vsum_ref = rest
+        else:
+            kv_ref, ksum_ref, vsum_ref = rest
         i = pl.program_id(1)
 
         @pl.when(i == 0)
@@ -45,11 +51,18 @@ def _make_kernel(dk_true: int, chunk: int):
         k = k_ref[0].astype(jnp.float32)
         v = v_ref[0].astype(jnp.float32)              # (C, dv_pad)
         dk_pad = q.shape[-1]
+        dv_pad = v.shape[-1]
         # Binarize; zero the padded feature lanes so they drop out of dots.
         lane = jax.lax.broadcasted_iota(jnp.int32, (chunk, dk_pad), 1)
         valid = (lane < dk_true).astype(jnp.float32)
         bq = jnp.where(q >= 0, 1.0, -1.0) * valid
         bk = jnp.where(k >= 0, 1.0, -1.0) * valid
+        # Zero padded sequence positions (tail chunk): their k/v must not
+        # enter the carry, and causal masking keeps them out of real outputs.
+        row_k = jax.lax.broadcasted_iota(jnp.int32, (chunk, dk_pad), 0)
+        bk = bk * (i * chunk + row_k < n_true).astype(jnp.float32)
+        row_v = jax.lax.broadcasted_iota(jnp.int32, (chunk, dv_pad), 0)
+        v = v * (i * chunk + row_v < n_true).astype(jnp.float32)
 
         d = jnp.float32(dk_true)
         cnt_prev = (i * chunk).astype(jnp.float32)
@@ -69,38 +82,67 @@ def _make_kernel(dk_true: int, chunk: int):
         kv_ref[...] += jnp.dot(bk.T, v, preferred_element_type=jnp.float32)
         ksum_ref[...] += jnp.sum(bk, axis=0, keepdims=True)
         vsum_ref[...] += jnp.sum(v, axis=0, keepdims=True)
+        if return_state:
+            # Same (gg, 0) block every chunk step; the last write survives —
+            # the final carry leaves VMEM exactly once per (batch*head).
+            kv_out[0] = kv_ref[...]
+            ksum_out[...] = ksum_ref[...]
+            vsum_out[...] = vsum_ref[...]
 
     return kernel
 
 
-@functools.partial(jax.jit, static_argnames=("dk_true", "chunk", "interpret"))
+@functools.partial(jax.jit, static_argnames=("dk_true", "chunk", "n_true",
+                                              "interpret", "return_state"))
 def binary_linear_attention_pallas(q, k, v, *, dk_true=None, chunk=CHUNK,
-                                   interpret=False):
+                                   n_true=None, interpret=False,
+                                   return_state=False):
     """q,k: (G, N, Dk); v: (G, N, Dv); causal, includes self. N % chunk == 0.
 
     dk_true: the unpadded head dim (defaults to Dk) — see module docstring.
+    n_true: the unpadded sequence length (defaults to N); positions beyond it
+      are masked out of the carry so the wrapper may pad N to a chunk multiple.
+    return_state: additionally emit the final recurrent carry
+      (kv (G, Dk, Dv), ksum (G, 1, Dk), vsum (G, 1, Dv)) — the parallel-prefill
+      handoff into the O(1) decode state.
     """
     g, n, dk = q.shape
     dv = v.shape[-1]
     assert n % chunk == 0, (n, chunk)
     dk_true = dk if dk_true is None else int(dk_true)
+    n_true = n if n_true is None else int(n_true)
     grid = (g, n // chunk)
+    out_specs = pl.BlockSpec((1, chunk, dv), lambda gg, i: (gg, i, 0))
+    out_shape = jax.ShapeDtypeStruct((g, n, dv), v.dtype)
+    if return_state:
+        out_specs = [
+            out_specs,
+            pl.BlockSpec((1, dk, dv), lambda gg, i: (gg, 0, 0)),
+            pl.BlockSpec((1, dk), lambda gg, i: (gg, 0)),
+            pl.BlockSpec((1, dv), lambda gg, i: (gg, 0)),
+        ]
+        out_shape = [
+            out_shape,
+            jax.ShapeDtypeStruct((g, dk, dv), jnp.float32),
+            jax.ShapeDtypeStruct((g, dk), jnp.float32),
+            jax.ShapeDtypeStruct((g, dv), jnp.float32),
+        ]
     return pl.pallas_call(
-        _make_kernel(dk_true, chunk),
+        _make_kernel(dk_true, chunk, n_true, return_state),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, chunk, dk), lambda gg, i: (gg, i, 0)),
             pl.BlockSpec((1, chunk, dk), lambda gg, i: (gg, i, 0)),
             pl.BlockSpec((1, chunk, dv), lambda gg, i: (gg, i, 0)),
         ],
-        out_specs=pl.BlockSpec((1, chunk, dv), lambda gg, i: (gg, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((g, n, dv), v.dtype),
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[
             pltpu.VMEM((dk, dv), jnp.float32),
             pltpu.VMEM((1, dk), jnp.float32),
             pltpu.VMEM((1, dv), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v)

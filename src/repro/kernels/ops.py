@@ -164,16 +164,23 @@ def add_matmul_bitpacked(x, packed, impl=None):
 # fused causal binary linear attention
 # ---------------------------------------------------------------------------
 
-def binary_linear_attention_fused(q, k, v, *, chunk=None, impl=None):
+def binary_linear_attention_fused(q, k, v, *, chunk=None, impl=None,
+                                  return_state=False):
     """q,k: (B, H, N, Dk); v: (B, H, N, Dv). Causal, includes self.
 
     Inference/serving path (no VJP; training uses repro.core.add_attention).
+    return_state=True additionally returns the final recurrent carry
+    {"kv", "ksum", "vsum", "count"} (init_decode_state layout) so a chunked
+    prefill can hand off directly to the O(1) decode step.
     """
     impl = impl or default_impl()
     b, h, n, dk = q.shape
     dv = v.shape[-1]
     if impl == "xla":
-        return _ref.binary_linear_attention_ref(q, k, v, causal=True)
+        out = _ref.binary_linear_attention_ref(q, k, v, causal=True)
+        if not return_state:
+            return out
+        return out, _ref.binary_linear_attention_state_ref(q, k, v)
     chunk = chunk or min(_linattn.CHUNK, n)
     qg = q.reshape(b * h, n, dk)
     kg = k.reshape(b * h, n, dk)
@@ -187,6 +194,16 @@ def binary_linear_attention_fused(q, k, v, *, chunk=None, impl=None):
         qp = _pad_to(qp, chunk, 1)
         kp = _pad_to(kp, chunk, 1)
         vp = _pad_to(vp, chunk, 1)
-    out = _linattn.binary_linear_attention_pallas(
-        qp, kp, vp, dk_true=dk, chunk=chunk, interpret=(impl == "interpret"))
-    return out[:, :n, :dv].reshape(b, h, n, dv)
+    res = _linattn.binary_linear_attention_pallas(
+        qp, kp, vp, dk_true=dk, chunk=chunk, n_true=n,
+        interpret=(impl == "interpret"), return_state=return_state)
+    if not return_state:
+        return res[:, :n, :dv].reshape(b, h, n, dv)
+    out, kv, ksum, vsum = res
+    state = {
+        "kv": kv[:, :dk, :dv].reshape(b, h, dk, dv),
+        "ksum": ksum[:, :dk].reshape(b, h, dk),
+        "vsum": vsum[:, :dv].reshape(b, h, dv),
+        "count": jnp.asarray(float(n), jnp.float32),
+    }
+    return out[:, :n, :dv].reshape(b, h, n, dv), state

@@ -46,3 +46,20 @@ def binary_linear_attention_ref(q, k, v, causal=True):
     out = jnp.einsum("bhnm,bhme->bhne", scores, v.astype(jnp.float32))
     den = jnp.sum(scores, axis=-1, keepdims=True)
     return (out / (den + 1e-6)).astype(v.dtype)
+
+
+def binary_linear_attention_state_ref(q, k, v):
+    """Final recurrent carry after consuming the whole sequence.
+
+    Matches core.add_attention.init_decode_state layout: the state a chunked
+    prefill must hand to binary_linear_attention_step for token N+1.
+    """
+    n = k.shape[-2]
+    bk = jnp.where(k >= 0, 1.0, -1.0).astype(jnp.float32)
+    v32 = v.astype(jnp.float32)
+    return {
+        "kv": jnp.einsum("bhnd,bhne->bhde", bk, v32),
+        "ksum": jnp.sum(bk, axis=-2),
+        "vsum": jnp.sum(v32, axis=-2),
+        "count": jnp.asarray(float(n), jnp.float32),
+    }

@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
+from repro.kernels.tpu_compat import CompilerParams as _CompilerParams
+
 
 from repro.core.quant import P_MIN
 
@@ -71,7 +73,7 @@ def shift_matmul_pallas(x, w_packed, *, bm=BM, bn=BN, bk=BK, interpret=False):
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, w_packed)

@@ -1,0 +1,12 @@
+"""Version compat for `jax.experimental.pallas.tpu` symbol renames."""
+from __future__ import annotations
+
+import jax.experimental.pallas.tpu as pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams across 0.4.x/0.5.x.
+CompilerParams = getattr(pltpu, "CompilerParams",
+                         getattr(pltpu, "TPUCompilerParams", None))
+if CompilerParams is None:  # pragma: no cover - depends on jax version
+    raise ImportError(
+        "no CompilerParams/TPUCompilerParams in jax.experimental.pallas.tpu; "
+        "unsupported jax version")

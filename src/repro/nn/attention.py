@@ -153,10 +153,13 @@ class Attention:
 
     # -- shared projection helpers ------------------------------------------
     def _qkv(self, params, x, positions):
+        """Returns (q, k, v, vraw); vraw is the pre-DWConv V projection —
+        the raw stream the decode conv cache is warmed from."""
         b, n, _ = x.shape
         q = self.q_proj(params["q"], x).reshape(b, n, self.h, self.dh)
         k = self.k_proj(params["k"], x).reshape(b, n, self.hkv, self.dh)
-        vflat = self.v_proj(params["v"], x)
+        vraw = self.v_proj(params["v"], x)
+        vflat = vraw
         if self.dwconv is not None:
             vflat = vflat + self.dwconv(params["dwconv"], vflat)
         v = vflat.reshape(b, n, self.hkv, self.dh)
@@ -165,7 +168,7 @@ class Attention:
             q = self.q_norm(params["q_norm"], q)
             k = self.k_norm(params["k_norm"], k)
         q, k = self._rope(q, k, positions)
-        return q, k, v
+        return q, k, v, vraw
 
     def _rope(self, q, k, positions):
         cfg = self.cfg
@@ -180,7 +183,7 @@ class Attention:
     # -- full-sequence forward (train / prefill) -----------------------------
     def __call__(self, params, x, positions=None, train=True):
         cfg = self.cfg
-        q, k, v = self._qkv(params, x, positions)
+        q, k, v, _ = self._qkv(params, x, positions)
         b, _, n, _ = q.shape
         if self.mode == "dense":
             out = softmax_attention(q, k, v, causal=self.causal,
@@ -232,6 +235,60 @@ class Attention:
         scale = jnp.max(jnp.abs(t), axis=-1) / 127.0 + 1e-8
         q = jnp.clip(jnp.round(t / scale[..., None]), -127, 127).astype(jnp.int8)
         return q, scale.astype(jnp.float32)
+
+    # -- parallel prefill ----------------------------------------------------
+    def prefill(self, params, x, cache, positions=None):
+        """Whole-prompt pass against a *fresh* cache. x: (B, N, d_model).
+
+        Returns (y (B, N, d_model), cache) where cache is decode-ready: the
+        linear modes hand over the chunked pass's final recurrent carry (one
+        O(N) pass instead of N decode steps); dense modes bulk-write K/V.
+        """
+        cfg = self.cfg
+        b, n, _ = x.shape
+        q, k, v, vraw = self._qkv(params, x, positions)
+        if self.mode in ("linear", "binary_linear"):
+            g = self.h // self.hkv
+            kf = _repeat_kv(k, g)
+            vf = _repeat_kv(v, g)
+            out, state = la.binary_linear_attention(
+                q.astype(jnp.float32), kf.astype(jnp.float32),
+                vf.astype(jnp.float32), causal=self.causal, chunk=min(128, n),
+                train=False, feature=self.feature, return_state=True)
+            out = out.astype(x.dtype)
+            new_cache = dict(state)
+            if "conv" in cache:
+                new_cache["conv"] = L.trailing_window(
+                    vraw, self.dwconv.width - 1, cache["conv"].dtype)
+        else:
+            out = softmax_attention(q, k, v, causal=self.causal,
+                                    window=self.window,
+                                    softcap=cfg.attn_logit_softcap,
+                                    chunk=min(512, n))
+            length = cache["k"].shape[2]
+            m = min(n, length)          # ring buffer keeps the last `length`
+            pos_abs = jnp.arange(n - m, n, dtype=jnp.int32)
+            slots = jnp.mod(pos_abs, length)
+            k_tail, v_tail = k[:, :, n - m:], v[:, :, n - m:]
+            quantized = cfg.kv_cache_dtype == "int8"
+            if quantized:
+                kq, kscale = self._quantize_kv(k_tail)
+                vq, vscale = self._quantize_kv(v_tail)
+                ck = cache["k"].at[:, :, slots].set(kq)
+                cv = cache["v"].at[:, :, slots].set(vq)
+            else:
+                ck = cache["k"].at[:, :, slots].set(
+                    k_tail.astype(cache["k"].dtype))
+                cv = cache["v"].at[:, :, slots].set(
+                    v_tail.astype(cache["v"].dtype))
+            slot_pos = cache["slot_pos"].at[slots].set(pos_abs)
+            new_cache = {"k": ck, "v": cv, "slot_pos": slot_pos,
+                         "pos": jnp.asarray(n, jnp.int32)}
+            if quantized:
+                new_cache["k_scale"] = cache["k_scale"].at[:, :, slots].set(kscale)
+                new_cache["v_scale"] = cache["v_scale"].at[:, :, slots].set(vscale)
+        out = out.transpose(0, 2, 1, 3).reshape(b, n, self.h * self.dh)
+        return self.o_proj(params["o"], out), new_cache
 
     def decode_step(self, params, x_t, cache):
         """x_t: (B, d_model) one token. Returns (y_t, cache)."""
@@ -384,7 +441,9 @@ class MLAttention:
             k_rope = L.apply_rope(k_rope, positions, self.cfg.rope_theta)
         return q_nope, q_rope, c_kv, k_rope
 
-    def __call__(self, params, x, positions=None, train=True):
+    def _assemble_qkv(self, params, x, positions):
+        """Full per-head (q, k, v) plus the latent (c_kv, k_rope) streams —
+        shared by __call__ and prefill so their math can never diverge."""
         b, n, _ = x.shape
         m = self.m
         q_nope, q_rope, c_kv, k_rope = self._project(params, x, positions)
@@ -395,6 +454,12 @@ class MLAttention:
         k = jnp.concatenate([k_nope, jnp.broadcast_to(
             k_rope, (b, self.h, n, m.qk_rope_head_dim))], axis=-1)
         q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        return q, k, v, c_kv, k_rope
+
+    def __call__(self, params, x, positions=None, train=True):
+        b, n, _ = x.shape
+        m = self.m
+        q, k, v, _, _ = self._assemble_qkv(params, x, positions)
         if self.mode == "dense":
             out = softmax_attention(q, k, v, causal=self.cfg.causal,
                                     chunk=min(512, n))
@@ -418,6 +483,35 @@ class MLAttention:
             "k_rope": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype),
             "pos": jnp.zeros((), jnp.int32),
         }
+
+    def prefill(self, params, x, cache, positions=None):
+        """Whole-prompt pass against a fresh cache → (y, decode-ready cache).
+
+        Linear modes hand over the chunked pass's final recurrent carry; the
+        dense mode bulk-writes the compressed latent (c_kv, k_rope) rows.
+        """
+        b, n, _ = x.shape
+        m = self.m
+        q, k, v, c_kv, k_rope = self._assemble_qkv(params, x, positions)
+        if self.mode in ("linear", "binary_linear"):
+            out, new_cache = la.binary_linear_attention(
+                q.astype(jnp.float32), k.astype(jnp.float32),
+                v.astype(jnp.float32), causal=self.cfg.causal,
+                chunk=min(128, n), train=False, feature=self.feature,
+                return_state=True)
+            out = out.astype(x.dtype)
+        else:
+            out = softmax_attention(q, k, v, causal=self.cfg.causal,
+                                    chunk=min(512, n))
+            ck = jax.lax.dynamic_update_slice(
+                cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, 0, 0))
+            cr = jax.lax.dynamic_update_slice(
+                cache["k_rope"], k_rope[:, 0].astype(cache["k_rope"].dtype),
+                (0, 0, 0))
+            new_cache = {"c_kv": ck, "k_rope": cr,
+                         "pos": jnp.asarray(n, jnp.int32)}
+        out = out.transpose(0, 2, 1, 3).reshape(b, n, self.h * m.v_head_dim)
+        return self.o_proj(params["o"], out), new_cache
 
     def decode_step(self, params, x_t, cache):
         b = x_t.shape[0]

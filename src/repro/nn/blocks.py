@@ -113,6 +113,34 @@ class TransformerBlock:
             cache["feed"] = self.feed.init_cache(batch, max_len, dtype)
         return cache
 
+    def prefill(self, params, x, cache, positions=None):
+        """Whole-prompt pass against a fresh cache. x: (B, N, d_model) →
+        (y (B, N, d_model), decode-ready cache). Same residual wiring as
+        __call__; the mixer fills its decode state in one chunked pass."""
+        h = self.norm1(params["norm1"], x)
+        mix, mixer_cache = self.mixer.prefill(params["mixer"], h,
+                                              cache["mixer"], positions=positions)
+        new_cache = {"mixer": mixer_cache}
+        if self.parallel:
+            ff, fc = self._feed_prefill(params, h, cache)
+            if fc is not None:
+                new_cache["feed"] = fc
+            return x + mix + ff, new_cache
+        x = x + mix
+        h2 = self.norm2(params["norm2"], x)
+        ff, fc = self._feed_prefill(params, h2, cache)
+        if fc is not None:
+            new_cache["feed"] = fc
+        return x + ff, new_cache
+
+    def _feed_prefill(self, params, h, cache):
+        if hasattr(self.feed, "prefill"):
+            return self.feed.prefill(params["feed"], h, cache["feed"])
+        if self._feed_has_aux:
+            y, _ = self.feed(params["feed"], h, train=False)
+            return y, None
+        return self.feed(params["feed"], h), None
+
     def decode_step(self, params, x_t, cache):
         """x_t: (B, d_model) → (y_t, cache)."""
         h = self.norm1(params["norm1"], x_t[:, None])[:, 0]

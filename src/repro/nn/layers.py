@@ -228,3 +228,16 @@ class DWConv1D:
         window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)
         y = jnp.einsum("bwd,wd->bd", window.astype(self.dtype), w)
         return y + params["bias"].astype(self.dtype), window[:, 1:]
+
+
+def trailing_window(x, w, dtype=None):
+    """Last `w` steps of x (B, N, D), front-zero-padded to exactly `w`.
+
+    Warms a causal-conv decode state from a full-sequence (prefill) pass: the
+    zeros for N < w reproduce the conv's implicit causal left-padding.
+    """
+    b, n, d = x.shape
+    tail = x[:, max(0, n - w):]
+    if n < w:
+        tail = jnp.pad(tail, ((0, 0), (w - n, 0), (0, 0)))
+    return tail.astype(dtype or x.dtype)

@@ -204,6 +204,69 @@ class LanguageModel:
                             for blk in self.rem_blocks]
         return cache
 
+    def prefill(self, params, inputs, cache, positions=None, last_only=False):
+        """Parallel prefill: one chunked full-sequence pass that fills a fresh
+        decode cache (linear-state carries, dense KV rows, conv windows).
+
+        inputs: (B, N) int32 tokens or (B, N, d) embeddings; cache from
+        init_cache (must be fresh — positions are assumed to start at 0).
+        Returns (logits (B, N, vocab), decode-ready cache); logits[:, -1] is
+        the next-token distribution the decode loop samples from.
+        last_only=True applies norm+head to the final position only (logits
+        (B, 1, vocab)) — serving never reads the other N-1 rows, and for real
+        vocabularies the full (B, N, vocab) buffer dominates prefill cost.
+        """
+        if self.cfg.is_encoder:
+            raise ValueError("prefill() is a decode-path API; "
+                             f"{self.cfg.name} is encoder-only (causal=False)")
+        x = self._inputs_to_x(params, inputs)
+        b, n = x.shape[0], x.shape[1]
+        if positions is None:
+            positions = self._default_positions(b, n)
+
+        if self.cfg.scan_layers and self.n_cycles > 0:
+            def body(x, xs):
+                layer_params, layer_cache = xs
+                new_caches = []
+                for j, blk in enumerate(self.blocks):
+                    x, c = blk.prefill(layer_params[j], x, layer_cache[j],
+                                       positions=positions)
+                    new_caches.append(c)
+                return x, tuple(new_caches)
+
+            x, new_stacks = jax.lax.scan(
+                body, x, (tuple(params["layers"]), tuple(cache["layers"])))
+            new_cache = {"layers": list(new_stacks)}
+        else:
+            # Cycle-major (cycle 0: block 0..K, cycle 1: block 0..K, ...) to
+            # match __call__ and the scanned branch.
+            stack_c = [[] for _ in self.blocks]
+            for i in range(self.n_cycles):
+                for j, blk in enumerate(self.blocks):
+                    pj = jax.tree_util.tree_map(lambda a: a[i], params["layers"][j])
+                    cj = jax.tree_util.tree_map(lambda a: a[i], cache["layers"][j])
+                    x, c = blk.prefill(pj, x, cj, positions=positions)
+                    stack_c[j].append(c)
+            new_cache = {"layers": [
+                jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *cs)
+                for cs in stack_c]}
+        if self.n_rem:
+            new_rem = []
+            for j, blk in enumerate(self.rem_blocks):
+                x, c = blk.prefill(params["rem"][j], x, cache["rem"][j],
+                                   positions=positions)
+                new_rem.append(c)
+            new_cache["rem"] = new_rem
+
+        if last_only:
+            x = x[:, -1:]
+        x = self.final_norm(params["final_norm"], x)
+        if self.head is not None:
+            logits = self.head(params["head"], x)
+        else:
+            logits = self.embed.attend(params["embed"], x)
+        return logits, new_cache
+
     def decode_step(self, params, inputs_t, cache):
         """inputs_t: (B,) int32 token or (B, d) embedding → (logits_t, cache)."""
         if self.embed is not None:
@@ -224,17 +287,18 @@ class LanguageModel:
                 body, x_t, (tuple(params["layers"]), tuple(cache["layers"])))
             new_cache = {"layers": list(new_stacks)}
         else:
-            new_layers = []
-            for j, blk in enumerate(self.blocks):
-                stack_c = []
-                for i in range(self.n_cycles):
+            # Cycle-major to match __call__ (block-major would run a
+            # different network for multi-block patterns with n_cycles > 1).
+            stack_c = [[] for _ in self.blocks]
+            for i in range(self.n_cycles):
+                for j, blk in enumerate(self.blocks):
                     pj = jax.tree_util.tree_map(lambda a: a[i], params["layers"][j])
                     cj = jax.tree_util.tree_map(lambda a: a[i], cache["layers"][j])
                     x_t, c = blk.decode_step(pj, x_t, cj)
-                    stack_c.append(c)
-                new_layers.append(jax.tree_util.tree_map(
-                    lambda *xs: jnp.stack(xs), *stack_c))
-            new_cache = {"layers": new_layers}
+                    stack_c[j].append(c)
+            new_cache = {"layers": [
+                jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *cs)
+                for cs in stack_c]}
         if self.n_rem:
             new_rem = []
             for j, blk in enumerate(self.rem_blocks):

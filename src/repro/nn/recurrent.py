@@ -100,6 +100,22 @@ class RGLRUBlock:
                 "conv": jnp.zeros((batch, self.cfg.conv1d_width - 1, self.dr), dtype),
                 "pos": jnp.zeros((), jnp.int32)}
 
+    def prefill(self, params, x, cache, positions=None):
+        """Whole-prompt pass against a fresh cache → (y, decode-ready cache).
+        One associative scan replaces N sequential decode steps."""
+        n = x.shape[1]
+        gate = jax.nn.gelu(self.in_gate(params["in_gate"], x))
+        ux = self.in_x(params["in_x"], x)
+        u = self.conv(params["conv"], ux)
+        a, b = self._gates(params, u)
+        h = _rglru_scan(a, b, h0=cache["h"])
+        y = self.out(params["out"], h.astype(self.dt) * gate)
+        new_cache = {"h": h[:, -1],
+                     "conv": L.trailing_window(ux, self.cfg.conv1d_width - 1,
+                                               cache["conv"].dtype),
+                     "pos": cache["pos"] + n}
+        return y, new_cache
+
     def decode_step(self, params, x_t, cache):
         gate = jax.nn.gelu(self.in_gate(params["in_gate"], x_t))
         ux = self.in_x(params["in_x"], x_t)
@@ -196,15 +212,20 @@ class RWKV6TimeMix:
         y = y.reshape(b, n, -1)
         return y * params["ln_scale"] + params["ln_bias"]
 
-    def __call__(self, params, x, positions=None, train=True):
+    def _wkv(self, params, x, S0=None):
+        """Full-sequence WKV pass. Returns (out (B,N,H,hs) pre-norm f32,
+        gate g, final state S) so prefill can reuse the training dataflow."""
         b, n, d = x.shape
         r, k, v, g, w = self._streams(params, x, _token_shift(x))
         r, k, v = map(self._heads, (r, k, v))              # (B,N,H,hs)
         w = self._heads(w.astype(jnp.float32))
         u = params["u"].astype(jnp.float32)
+        if S0 is None:
+            S0 = jnp.zeros((b, self.h, self.hs, self.hs), jnp.float32)
 
         if self.chunked and n % self.chunk == 0 and n > self.chunk:
-            out = rwkv6_chunked(r, k, v, w, u, chunk=self.chunk)
+            out, S = rwkv6_chunked(r, k, v, w, u, chunk=self.chunk, S0=S0,
+                                   return_state=True)
         else:
             def step(S, xs):
                 r_t, k_t, v_t, w_t = xs                    # (B,H,hs)
@@ -215,9 +236,12 @@ class RWKV6TimeMix:
 
             xs = tuple(t.transpose(1, 0, 2, 3).astype(jnp.float32)
                        for t in (r, k, v, w))              # (N,B,H,hs)
-            S0 = jnp.zeros((b, self.h, self.hs, self.hs), jnp.float32)
-            _, out = jax.lax.scan(step, S0, xs)
+            S, out = jax.lax.scan(step, S0, xs)
             out = out.transpose(1, 0, 2, 3)                # (B,N,H,hs)
+        return out, g, S
+
+    def __call__(self, params, x, positions=None, train=True):
+        out, g, _ = self._wkv(params, x)
         out = self._group_norm(params, out).astype(self.dt)
         return self.o_proj(params["o"], out * g)
 
@@ -225,6 +249,16 @@ class RWKV6TimeMix:
         return {"S": jnp.zeros((batch, self.h, self.hs, self.hs), jnp.float32),
                 "x_prev": jnp.zeros((batch, self.cfg.d_model), dtype),
                 "pos": jnp.zeros((), jnp.int32)}
+
+    def prefill(self, params, x, cache, positions=None):
+        """Whole-prompt pass against a fresh cache → (y, decode-ready cache).
+        One (optionally chunked) WKV scan replaces N decode steps."""
+        out, g, S = self._wkv(params, x, S0=cache["S"])
+        y = self.o_proj(params["o"],
+                        self._group_norm(params, out).astype(self.dt) * g)
+        new_cache = {"S": S, "x_prev": x[:, -1].astype(cache["x_prev"].dtype),
+                     "pos": cache["pos"] + x.shape[1]}
+        return y, new_cache
 
     def decode_step(self, params, x_t, cache):
         x = x_t[:, None]
@@ -240,7 +274,7 @@ class RWKV6TimeMix:
         return y, {"S": S, "x_prev": x_t, "pos": cache["pos"] + 1}
 
 
-def rwkv6_chunked(r, k, v, w, u, chunk=8):
+def rwkv6_chunked(r, k, v, w, u, chunk=8, S0=None, return_state=False):
     """Chunked WKV recurrence (GLA-style) — beyond-paper §Perf optimization.
 
     Replaces the per-token scan (N sequential state updates of rank-1 math)
@@ -304,10 +338,14 @@ def rwkv6_chunked(r, k, v, w, u, chunk=8):
         return S, out
 
     u_kt = kc * u[None, None, :, None, :]                  # u ⊙ k per token
-    S0 = jnp.zeros((b, h, hs, hs), f32)
-    _, out = jax.lax.scan(step, S0, (qf, kf, vc, u_kt, rc, q_inter, k_end,
-                                     mask_decay))
-    return out.transpose(1, 0, 3, 2, 4).reshape(b, n, h, hs)
+    if S0 is None:
+        S0 = jnp.zeros((b, h, hs, hs), f32)
+    S, out = jax.lax.scan(step, S0.astype(f32),
+                          (qf, kf, vc, u_kt, rc, q_inter, k_end, mask_decay))
+    out = out.transpose(1, 0, 3, 2, 4).reshape(b, n, h, hs)
+    if return_state:
+        return out, S
+    return out
 
 
 class RWKV6ChannelMix:
@@ -346,6 +384,12 @@ class RWKV6ChannelMix:
     def init_cache(self, batch, max_len=None, dtype=jnp.bfloat16):
         return {"x_prev": jnp.zeros((batch, self.cfg.d_model), dtype),
                 "pos": jnp.zeros((), jnp.int32)}
+
+    def prefill(self, params, x, cache, positions=None):
+        y = self._forward(params, x, _token_shift(x))
+        new_cache = {"x_prev": x[:, -1].astype(cache["x_prev"].dtype),
+                     "pos": cache["pos"] + x.shape[1]}
+        return y, new_cache
 
     def decode_step(self, params, x_t, cache):
         y = self._forward(params, x_t[:, None], cache["x_prev"][:, None])[:, 0]

@@ -1,1 +1,2 @@
-from repro.serve.decode import make_serve_step, make_prefill_step, generate
+from repro.serve.decode import (generate, make_decode_loop, make_prefill,
+                                make_prefill_step, make_serve_step)

@@ -1,10 +1,25 @@
-"""Serving: prefill + batched autoregressive decode.
+"""Serving: parallel prefill + scan-fused batched autoregressive decode.
 
-serve_step is the unit the decode dry-run cells lower: one new token against
-a persistent cache (dense KV / ring-buffer / MLA latent / O(1) linear-attn
-state — whichever the (arch, policy) pair dictates). `generate` is the
-minimal batched driver used by the serving example: greedy or temperature
-sampling, step-fused via jit with donated cache.
+The serving hot path has two phases, matching the paper's linear-attention
+duality (chunked vs recurrent — the same split flash-linear-attention exposes
+as mode='chunk' vs 'fused_recurrent'):
+
+- **prefill**: the whole prompt is consumed in ONE chunked full-sequence pass
+  (`model.prefill`) that emits a decode-ready cache — the final (d_k × d_v)
+  recurrent carry for linear-attention layers, bulk-written KV rows for dense
+  layers, trailing conv windows for the recurrent families. O(P) work, no
+  per-token host round-trips.
+- **decode**: the sampling loop is a single `jax.lax.scan` over
+  `model.decode_step` + on-device sampling, jit-compiled with the cache
+  donated. The host sees exactly one dispatch for the entire generation.
+
+`make_serve_step` remains the single-token unit the decode dry-run cells
+lower and the continuous-batching example drives.
+
+Note on token-choice MoE feeds: prefill routes the whole prompt as one group
+while sequential decode routes per token, so capacity-limited dropping can
+differ between the two paths. Non-MoE feeds (and MoE with generous capacity)
+are bit-comparable — see tests/test_prefill_decode.py.
 """
 from __future__ import annotations
 
@@ -23,6 +38,18 @@ def make_prefill_step(model):
     return prefill_step
 
 
+def make_prefill(model):
+    """Cache-filling prefill step: (params, prompts, cache) → (logits, cache).
+
+    logits is (B, 1, vocab) — the head runs on the last position only, since
+    that is the one row the decode loop samples from.
+    """
+    def prefill(params, prompts, cache):
+        return model.prefill(params, prompts, cache, last_only=True)
+
+    return prefill
+
+
 def make_serve_step(model):
     def serve_step(params, inputs_t, cache):
         return model.decode_step(params, inputs_t, cache)
@@ -30,32 +57,56 @@ def make_serve_step(model):
     return serve_step
 
 
+def _sample(logits, key, temperature):
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(
+        key, logits.astype(jnp.float32) / temperature).astype(jnp.int32)
+
+
+def make_decode_loop(model, temperature=0.0):
+    """Whole-generation decode loop: sampling + decode_step fused in one
+    `lax.scan`, so the entire autoregressive phase is a single device program
+    (jit with the cache donated; no per-token host round-trip).
+
+    (params, logits0 (B, V), cache, keys (T, ...)) → (tokens (B, T), cache).
+    """
+    def loop(params, logits0, cache, keys):
+        def step(carry, key):
+            logits, cache = carry
+            tok = _sample(logits, key, temperature)
+            logits, cache = model.decode_step(params, tok, cache)
+            return (logits, cache), tok
+
+        (_, cache), toks = jax.lax.scan(step, (logits0, cache), keys)
+        return toks.swapaxes(0, 1), cache
+
+    return loop
+
+
 def generate(model, params, prompts, max_new_tokens, *, temperature=0.0,
              rng=None, max_len=None):
     """prompts: (B, P) int32. Returns (B, P+max_new_tokens) tokens.
 
-    Prompt tokens are fed through the decode path (cache warmup), then new
-    tokens are sampled autoregressively.
+    The prompt is consumed by one parallel chunked prefill pass; new tokens
+    are then sampled by the scan-fused decode loop entirely on device.
     """
+    if temperature > 0.0 and rng is None:
+        raise ValueError(
+            "temperature > 0 requires an rng key: pass "
+            "rng=jax.random.PRNGKey(...) (or use temperature=0 for greedy)")
     b, p = prompts.shape
     max_len = max_len or (p + max_new_tokens)
     cache = model.init_cache(b, max_len=max_len)
-    step = jax.jit(make_serve_step(model), donate_argnums=(2,))
 
-    logits = None
-    for t in range(p):
-        logits, cache = step(params, prompts[:, t], cache)
+    prefill = jax.jit(make_prefill(model), donate_argnums=(2,))
+    logits_all, cache = prefill(params, prompts, cache)
+    logits0 = logits_all[:, -1]
 
-    out = [prompts]
-    tok = None
-    for i in range(max_new_tokens):
-        if temperature <= 0.0:
-            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        else:
-            rng, sub = jax.random.split(rng)
-            tok = jax.random.categorical(
-                sub, logits.astype(jnp.float32) / temperature).astype(jnp.int32)
-        out.append(tok[:, None])
-        if i + 1 < max_new_tokens:
-            logits, cache = step(params, tok, cache)
-    return jnp.concatenate(out, axis=1)
+    if temperature > 0.0:
+        keys = jax.random.split(rng, max_new_tokens)
+    else:
+        keys = jnp.zeros((max_new_tokens, 2), jnp.uint32)  # unused by argmax
+    loop = jax.jit(make_decode_loop(model, temperature), donate_argnums=(2,))
+    toks, _ = loop(params, logits0, cache, keys)
+    return jnp.concatenate([prompts, toks], axis=1)

@@ -101,6 +101,24 @@ def test_add_matmul_bitpacked_sweep(g, m, k, n):
     _close(ops.add_matmul_bitpacked(x, packed, "xla"), out_ref, tol=1e-3)
 
 
+@pytest.mark.parametrize("b,h,n,dk,dv", [(1, 2, 256, 16, 16),
+                                         (2, 1, 300, 24, 20)])
+def test_linattn_kernel_returns_final_carry(b, h, n, dk, dv):
+    """return_state must emit the exact recurrent carry (kv, ksum, vsum) the
+    O(1) decode step resumes from — including when N is padded to the chunk."""
+    q = jax.random.normal(jax.random.PRNGKey(10), (b, h, n, dk))
+    k = jax.random.normal(jax.random.PRNGKey(11), (b, h, n, dk))
+    v = jax.random.normal(jax.random.PRNGKey(12), (b, h, n, dv))
+    state_ref = ref.binary_linear_attention_state_ref(q, k, v)
+    for impl in ("interpret", "xla"):
+        out, state = ops.binary_linear_attention_fused(
+            q, k, v, chunk=128, impl=impl, return_state=True)
+        _close(out, ref.binary_linear_attention_ref(q, k, v, causal=True),
+               tol=1e-3)
+        for key in ("kv", "ksum", "vsum", "count"):
+            _close(state[key], state_ref[key], tol=1e-3)
+
+
 def test_linattn_kernel_state_locality():
     """Chunked kernel must equal the oracle even when the sequence spans many
     chunks (state carried in VMEM scratch across grid steps)."""

@@ -1,0 +1,167 @@
+"""Parallel-prefill / sequential-decode parity.
+
+The serving contract: a chunked `prefill()` over a P-token prompt must leave
+the model in EXACTLY the state (≤1e-4) that P sequential `decode_step` calls
+would — same recurrent carry / KV rows / conv windows, same next-token
+logits. P is chosen to NOT be a multiple of the causal chunk so the padded
+tail-chunk masking is exercised.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core import add_attention as la
+from repro.core.policy import STAGE1, ShiftAddPolicy
+from repro.nn.model import LanguageModel
+
+LINEAR_ELU1 = ShiftAddPolicy(attention="linear")
+
+
+def _model(policy=None, **kw):
+    base = dict(n_layers=2, d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+                vocab_size=64, dtype="float32", scan_layers=True, remat="none")
+    base.update(kw)
+    pol = {} if policy is None else {"policy": policy}
+    cfg = ModelConfig(name="t", family="dense", **pol, **base)
+    model = LanguageModel(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def _parity_errors(model, params, prompts, max_len):
+    b, p = prompts.shape
+    logits_pf, cache_pf = model.prefill(params, prompts,
+                                        model.init_cache(b, max_len=max_len))
+    cache_sq = model.init_cache(b, max_len=max_len)
+    logits_sq = None
+    for t in range(p):
+        logits_sq, cache_sq = model.decode_step(params, prompts[:, t], cache_sq)
+    assert (jax.tree_util.tree_structure(cache_pf)
+            == jax.tree_util.tree_structure(cache_sq))
+    logit_err = float(jnp.max(jnp.abs(logits_pf[:, -1] - logits_sq)))
+    state_err = max(
+        float(jnp.max(jnp.abs(jnp.asarray(a, jnp.float32)
+                              - jnp.asarray(b_, jnp.float32))))
+        for a, b_ in zip(jax.tree_util.tree_leaves(cache_pf),
+                         jax.tree_util.tree_leaves(cache_sq)))
+    return logit_err, state_err
+
+
+# P=13 with chunk=min(128, 13): full-chunk path; P=13 also exercises the
+# core-level padded-chunk path below (chunk=8 → 13 = 8 + 5).
+@pytest.mark.parametrize("policy", [STAGE1, LINEAR_ELU1, None],
+                         ids=["binary", "elu1", "dense_kv"])
+@pytest.mark.parametrize("p", [13, 16])
+def test_prefill_matches_sequential_decode(policy, p):
+    model, params = _model(policy)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, p), 0, 64)
+    logit_err, state_err = _parity_errors(model, params, prompts, p + 4)
+    assert logit_err <= 1e-4, logit_err
+    assert state_err <= 1e-4, state_err
+
+
+def test_prefill_matches_sequential_decode_unscanned_rem_blocks():
+    """Odd depth (rem blocks) + python-loop layer stack."""
+    model, params = _model(STAGE1, n_layers=3, scan_layers=False)
+    prompts = jax.random.randint(jax.random.PRNGKey(2), (2, 7), 0, 64)
+    logit_err, state_err = _parity_errors(model, params, prompts, 16)
+    assert logit_err <= 1e-4, logit_err
+    assert state_err <= 1e-4, state_err
+
+
+@pytest.mark.parametrize("feature", ["binary", "elu1"])
+@pytest.mark.parametrize("n,chunk", [(13, 8), (37, 16), (64, 16)])
+def test_chunked_state_matches_recurrent_steps(feature, n, chunk):
+    """Core-level: the chunked pass's final carry == N recurrent updates,
+    including causal chunk boundaries where N % chunk != 0."""
+    b, h, dk, dv = 2, 2, 16, 12
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (b, h, n, dk))
+    k = jax.random.normal(ks[1], (b, h, n, dk))
+    v = jax.random.normal(ks[2], (b, h, n, dv))
+    out, state = la.binary_linear_attention(
+        q, k, v, causal=True, chunk=chunk, feature=feature, return_state=True)
+    st = la.init_decode_state(b, h, dk, dv)
+    o_t = None
+    for t in range(n):
+        o_t, st = la.binary_linear_attention_step(
+            q[:, :, t], k[:, :, t], v[:, :, t], st, feature=feature)
+    for key in ("kv", "ksum", "vsum", "count"):
+        np.testing.assert_allclose(np.asarray(state[key]), np.asarray(st[key]),
+                                   atol=1e-4, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(out[:, :, -1]), np.asarray(o_t),
+                               atol=1e-4, rtol=1e-5)
+
+
+@pytest.mark.parametrize("scan_layers", [True, False])
+def test_prefill_and_decode_match_training_forward(scan_layers):
+    """Multi-block pattern with n_cycles > 1: prefill AND sequential decode
+    must apply layers in the same cycle-major order as the training __call__
+    (regression: the unscanned branch once ran block-major)."""
+    model, params = _model(STAGE1, n_layers=4, scan_layers=scan_layers,
+                           block_pattern=("attn", "attn"))
+    p = 6
+    prompts = jax.random.randint(jax.random.PRNGKey(7), (2, p), 0, 64)
+    ref_logits, _ = model(params, prompts, train=False)
+    logits_pf, _ = model.prefill(params, prompts,
+                                 model.init_cache(2, max_len=p + 2))
+    np.testing.assert_allclose(np.asarray(logits_pf), np.asarray(ref_logits),
+                               atol=1e-4, rtol=1e-5)
+    cache = model.init_cache(2, max_len=p + 2)
+    logits_sq = None
+    for t in range(p):
+        logits_sq, cache = model.decode_step(params, prompts[:, t], cache)
+    np.testing.assert_allclose(np.asarray(logits_sq),
+                               np.asarray(ref_logits[:, -1]),
+                               atol=1e-4, rtol=1e-5)
+
+
+def test_prefill_then_decode_continues_exactly():
+    """Tokens generated after a prefill handoff must equal tokens generated
+    after a purely sequential warmup (greedy, so exact)."""
+    model, params = _model(STAGE1)
+    p, new = 11, 6
+    prompts = jax.random.randint(jax.random.PRNGKey(4), (2, p), 0, 64)
+    max_len = p + new
+
+    logits_pf, cache = model.prefill(params, prompts,
+                                     model.init_cache(2, max_len=max_len))
+    logits = logits_pf[:, -1]
+    toks_a = []
+    for _ in range(new):
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        toks_a.append(tok)
+        logits, cache = model.decode_step(params, tok, cache)
+
+    cache = model.init_cache(2, max_len=max_len)
+    logits = None
+    for t in range(p):
+        logits, cache = model.decode_step(params, prompts[:, t], cache)
+    toks_b = []
+    for _ in range(new):
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        toks_b.append(tok)
+        logits, cache = model.decode_step(params, tok, cache)
+
+    np.testing.assert_array_equal(np.asarray(jnp.stack(toks_a)),
+                                  np.asarray(jnp.stack(toks_b)))
+
+
+def test_int8_kv_prefill_within_quantization_tolerance():
+    """int8 caches can't be bit-identical (sequential decode reads quantized
+    history; prefill attends in full precision) — but the dequantized rows
+    must agree at quantization scale."""
+    model, params = _model(kv_cache_dtype="int8")
+    prompts = jax.random.randint(jax.random.PRNGKey(5), (2, 9), 0, 64)
+    logit_err, _ = _parity_errors(model, params, prompts, 13)
+    assert logit_err < 0.1, logit_err
+
+
+def test_generate_rng_validation():
+    from repro.serve.decode import generate
+
+    model, params = _model()
+    prompts = jax.random.randint(jax.random.PRNGKey(6), (2, 4), 0, 64)
+    with pytest.raises(ValueError, match="rng"):
+        generate(model, params, prompts, 4, temperature=0.7)
