@@ -1,0 +1,56 @@
+"""ShiftAddViT policy-sweep serving benchmark. Writes BENCH_vit.json so the
+paper's headline claim (latency + energy reduction vs the dense ViT) has a
+per-PR trajectory, next to BENCH_serve.json's LM numbers.
+
+    PYTHONPATH=src python benchmarks/bench_vit.py [--batch 32]
+
+One set of pretrained dense weights is pushed through `convert_from` at
+stage 0 (dense), stage 1 (binary-linear attention) and stage 2 (+ MoE of
+Mult/Shift primitives), then served through the shape-bucketed inference
+engine. Reported per policy: batch latency, throughput, analytic per-image
+energy (paper Tab. 1 unit energies + DRAM movement), and the engine's
+compile counts (recompiles_after_warmup must be 0 — asserted in
+tests/test_vision_serve.py).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.nn.vit import ViTConfig
+from repro.serve.vision import policy_sweep
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--iters", type=int, default=10)
+    ap.add_argument("--image-size", type=int, default=32)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_vit.json"))
+    args = ap.parse_args()
+
+    cfg = ViTConfig(image_size=args.image_size, n_layers=args.layers,
+                    d_model=args.d_model, d_ff=2 * args.d_model)
+    rec = policy_sweep(cfg, batch=args.batch, iters=args.iters)
+    with open(args.out, "w") as f:
+        json.dump(rec, f, indent=2)
+
+    dense = rec["policies"]["dense"]
+    for name, r in rec["policies"].items():
+        print(f"{name:>9}: {r['latency_s_per_batch'] * 1e3:8.2f} ms/batch  "
+              f"{r['images_per_s']:9.1f} img/s  "
+              f"{r['energy_pj_per_image'] / 1e6:8.3f} uJ/img  "
+              f"({r['energy_pj_per_image'] / dense['energy_pj_per_image']:.2f}x "
+              f"dense energy, recompiles={r['recompiles_after_warmup']})")
+    print(f"wrote {os.path.abspath(args.out)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -123,3 +123,17 @@ def mlp_latency_estimate(tokens: int, d_model: int, d_hidden: int, kind: str) ->
 
 def expert_latencies(tokens: int, d_model: int, d_hidden: int, kinds) -> list:
     return [mlp_latency_estimate(tokens, d_model, d_hidden, k) for k in kinds]
+
+
+# Nominal token count at which expert latencies are evaluated for the α_i
+# coefficients and capacity splits. It only fixes the compute/memory-bound
+# regime; single source of truth so the dispatcher (nn/blocks,
+# core/moe_primitives) and the energy model (serve/vision) can never use
+# different regimes for "the same" split.
+NOMINAL_MOE_TOKENS = 1024
+
+
+def inverse_latency_weights(latencies) -> list:
+    """Normalized 1/latency weights — the latency-aware token split."""
+    inv = [1.0 / l for l in latencies]
+    return [w / sum(inv) for w in inv]

@@ -126,7 +126,7 @@ class MoEPrimitives:
             self.latencies = list(latencies)
         else:
             self.latencies = energy.expert_latencies(
-                1024, d_model, d_hidden, self.expert_kinds)
+                energy.NOMINAL_MOE_TOKENS, d_model, d_hidden, self.expert_kinds)
 
     # -- parameters ---------------------------------------------------------
     def init(self, key):
@@ -143,18 +143,85 @@ class MoEPrimitives:
         }
 
     # -- capacity schedule ---------------------------------------------------
+    def _capacity_weights(self):
+        if self.latency_aware:
+            return energy.inverse_latency_weights(self.latencies)
+        return [1.0 / self.n_experts] * self.n_experts
+
     def capacities(self, n_tokens: int):
         """Static per-expert capacities; latency-aware split sends more tokens
-        to faster experts (inverse-latency weights)."""
-        if self.latency_aware:
-            inv = [1.0 / l for l in self.latencies]
-            weights = [w / sum(inv) for w in inv]
-        else:
-            weights = [1.0 / self.n_experts] * self.n_experts
-        caps = [int(math.ceil(self.capacity_factor * n_tokens * w)) for w in weights]
-        return [min(c, n_tokens) for c in caps]
+        to faster experts (inverse-latency weights).
+
+        Invariant: capacity_factor >= 1.0 ⇒ sum(caps) >= n_tokens. Per-term
+        ceil usually gets there on its own, but the guarantee is structural,
+        not a float-rounding accident: any deficit left after the
+        min(c, n_tokens) clamp is topped back up, largest-weight experts
+        first, so small groups can never silently shrink total capacity below
+        the token count.
+        """
+        weights = self._capacity_weights()
+        caps = [min(int(math.ceil(self.capacity_factor * n_tokens * w)), n_tokens)
+                for w in weights]
+        if self.capacity_factor >= 1.0:
+            deficit = n_tokens - sum(caps)
+            for i in sorted(range(self.n_experts), key=lambda j: -weights[j]):
+                if deficit <= 0:
+                    break
+                bump = min(deficit, n_tokens - caps[i])
+                caps[i] += bump
+                deficit -= bump
+        return caps
 
     # -- forward ------------------------------------------------------------
+    def _run_experts(self, params, buf, daux, caps, s):
+        """Run each expert on its static row segment of the dispatch buffer
+        and combine back to (G, S, d). Heterogeneous experts are independent
+        branches — parallel under SPMD, the paper's "ideal parallelism"
+        natively (DESIGN.md §2)."""
+        from repro.nn.dispatch import combine
+
+        outs = []
+        off = 0
+        for i, expert in enumerate(self.experts):
+            seg = buf[:, off:off + caps[i], :]
+            outs.append(expert(params["experts"][i], seg))
+            off += caps[i]
+        expert_out = jnp.concatenate(outs, axis=1)               # (G, total, d)
+        return combine(expert_out, daux, s, self.d_model)
+
+    def _route_dispatch(self, params, xg, select_logits, clean_logits, stats):
+        """Shared routing: top-1 selection on `select_logits` (noisy while
+        training, clean at inference), gates from the clean softmax, then
+        capacity dispatch. Single home for the gating math so the train and
+        serving paths can never diverge."""
+        from repro.nn.dispatch import dispatch
+
+        s = xg.shape[1]
+        probs = jax.nn.softmax(clean_logits, axis=-1)
+        top1 = jnp.argmax(select_logits, axis=-1)                # (G,S)
+        gate = jnp.take_along_axis(probs, top1[..., None], axis=-1)
+        caps = self.capacities(s)
+        buf, daux = dispatch(xg.astype(self.dtype), top1[..., None],
+                             gate.astype(jnp.float32), caps, stats=stats)
+        return probs, top1, caps, buf, daux
+
+    def infer(self, params, x):
+        """Deterministic inference dispatch — the serving fast path.
+
+        Routes on clean-logit argmax (no router noise, no rng) with the same
+        static latency-aware capacities as training, and computes none of the
+        aux/LL-loss statistics. Two calls on the same input produce identical
+        outputs. Returns y only.
+        """
+        from repro.nn.dispatch import group_tokens
+
+        xg, ungroup = group_tokens(x, self.d_model)
+        _, s, _ = xg.shape
+        clean_logits = self.router(params["router"], xg.astype(jnp.float32))
+        _, _, caps, buf, daux = self._route_dispatch(
+            params, xg, clean_logits, clean_logits, stats=False)
+        return ungroup(self._run_experts(params, buf, daux, caps, s)).astype(x.dtype)
+
     def __call__(self, params, x, train=True, rng=None):
         """x: (..., d_model). Tokens are routed in sharded groups
         (repro.nn.dispatch) with latency-aware per-expert capacities.
@@ -162,7 +229,7 @@ class MoEPrimitives:
         Returns (y, aux) where aux carries the LL-loss ingredients and
         dispatch statistics (paper Fig. 6 visualizations read these).
         """
-        from repro.nn.dispatch import combine, dispatch, group_tokens
+        from repro.nn.dispatch import group_tokens
 
         xg, ungroup = group_tokens(x, self.d_model)
         g, s, _ = xg.shape
@@ -173,26 +240,9 @@ class MoEPrimitives:
                 rng, clean_logits.shape)
         else:
             noisy = clean_logits
-        probs = jax.nn.softmax(clean_logits, axis=-1)
-        top1 = jnp.argmax(noisy, axis=-1)                        # (G,S)
-        gate = jnp.take_along_axis(probs, top1[..., None], axis=-1)
-
-        caps = self.capacities(s)                                 # per group
-        buf, daux = dispatch(xg.astype(self.dtype), top1[..., None],
-                              gate.astype(jnp.float32), caps)
-
-        # Heterogeneous experts: each owns a static row segment of the buffer
-        # and runs as an independent branch — parallel under SPMD, which is
-        # the paper's "ideal parallelism" natively (DESIGN.md §2).
-        outs = []
-        off = 0
-        for i, expert in enumerate(self.experts):
-            seg = buf[:, off:off + caps[i], :]
-            outs.append(expert(params["experts"][i], seg))
-            off += caps[i]
-        expert_out = jnp.concatenate(outs, axis=1)               # (G, total, d)
-
-        y = ungroup(combine(expert_out, daux, s, self.d_model)).astype(x.dtype)
+        probs, top1, caps, buf, daux = self._route_dispatch(
+            params, xg, noisy, clean_logits, stats=True)
+        y = ungroup(self._run_experts(params, buf, daux, caps, s)).astype(x.dtype)
 
         # latency_aware=False is the paper's baseline arm (Tab. 7 ablation):
         # homogeneous treatment — uniform α — rather than no balance at all.

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 from repro.kernels.tpu_compat import CompilerParams as _CompilerParams
+from repro.kernels.tpu_compat import pad_to_multiple as _pad_axis
 
 
 BM, BN, BK = 128, 128, 512
@@ -42,13 +43,21 @@ def _add_matmul_kernel(x_ref, b_ref, o_ref, acc_ref):
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
 def add_matmul_pallas(x, b, *, bm=BM, bn=BN, bk=BK, interpret=False):
-    """x: (G, M, K) float; b: (G, K, N) int8. Returns (G, M, N) in x.dtype."""
+    """x: (G, M, K) float; b: (G, K, N) int8. Returns (G, M, N) in x.dtype.
+
+    Shapes need NOT be multiples of the block sizes: inputs are zero-padded
+    up to the tile grid and the output sliced back — real ViT token counts
+    (197 for DeiT, 197-patch buckets) are first-class. Zero padding is exact
+    for this contraction (0 · ±1 = 0).
+    """
     g, m, k = x.shape
     g2, k2, n = b.shape
     assert g == g2 and k == k2, (x.shape, b.shape)
-    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (x.shape, b.shape)
-    grid = (g, m // bm, n // bn, k // bk)
-    return pl.pallas_call(
+    x = _pad_axis(_pad_axis(x, bm, 1), bk, 2)
+    b = _pad_axis(_pad_axis(b, bk, 1), bn, 2)
+    (_, mp, kp), np_ = x.shape, b.shape[2]
+    grid = (g, mp // bm, np_ // bn, kp // bk)
+    y = pl.pallas_call(
         _add_matmul_kernel,
         grid=grid,
         in_specs=[
@@ -56,9 +65,10 @@ def add_matmul_pallas(x, b, *, bm=BM, bn=BN, bk=BK, interpret=False):
             pl.BlockSpec((1, bk, bn), lambda gg, i, j, kk: (gg, kk, j)),
         ],
         out_specs=pl.BlockSpec((1, bm, bn), lambda gg, i, j, kk: (gg, i, j)),
-        out_shape=jax.ShapeDtypeStruct((g, m, n), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((g, mp, np_), x.dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, b)
+    return y[:, :m, :n]

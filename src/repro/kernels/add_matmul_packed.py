@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 from repro.kernels.tpu_compat import CompilerParams as _CompilerParams
+from repro.kernels.tpu_compat import pad_to_multiple as _pad_axis
 
 
 BM, BN, BK8 = 128, 128, 64          # BK8 packed rows = 512 logical K rows
@@ -60,13 +61,20 @@ def _kernel(x_ref, p_ref, o_ref, acc_ref):
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk8", "interpret"))
 def add_matmul_packed_pallas(x, packed, *, bm=BM, bn=BN, bk8=BK8,
                              interpret=False):
-    """x: (G, M, K); packed: (G, K//8, N) uint8 → (G, M, N)."""
+    """x: (G, M, K); packed: (G, K//8, N) uint8 → (G, M, N).
+
+    M/N/K8 need not be block multiples: inputs are padded to the tile grid
+    and the output sliced. Padded packed bytes decode to -1 rows, but x is
+    zero-padded over the same logical K rows, so they contribute nothing.
+    """
     g, m, k = x.shape
     g2, k8, n = packed.shape
     assert g == g2 and k == k8 * 8, (x.shape, packed.shape)
-    assert m % bm == 0 and n % bn == 0 and k8 % bk8 == 0
-    grid = (g, m // bm, n // bn, k8 // bk8)
-    return pl.pallas_call(
+    x = _pad_axis(_pad_axis(x, bm, 1), bk8 * 8, 2)
+    packed = _pad_axis(_pad_axis(packed, bk8, 1), bn, 2)
+    (_, mp, _), (k8p, np_) = x.shape, packed.shape[1:]
+    grid = (g, mp // bm, np_ // bn, k8p // bk8)
+    y = pl.pallas_call(
         _kernel,
         grid=grid,
         in_specs=[
@@ -74,10 +82,11 @@ def add_matmul_packed_pallas(x, packed, *, bm=BM, bn=BN, bk8=BK8,
             pl.BlockSpec((1, bk8, bn), lambda gg, i, j, kk: (gg, kk, j)),
         ],
         out_specs=pl.BlockSpec((1, bm, bn), lambda gg, i, j, kk: (gg, i, j)),
-        out_shape=jax.ShapeDtypeStruct((g, m, n), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((g, mp, np_), x.dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,
     )(x, packed)
+    return y[:, :m, :n]

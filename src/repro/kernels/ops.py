@@ -10,9 +10,11 @@ Implementation selection (per-call `impl=` or process-wide default):
                 what the CPU dry-run lowers, so the roofline sees the real
                 HBM layout (1 B/weight) without TPU codegen.
 
-Default is "pallas" on TPU and "xla" elsewhere. Wrappers handle padding to
-block multiples and define custom VJPs (gradients flow to activations only —
-packed operands are frozen deployment artifacts).
+Default is "pallas" on TPU and "xla" elsewhere. Wrappers pick shape-adapted
+block sizes and define custom VJPs (gradients flow to activations only —
+packed operands are frozen deployment artifacts). Padding to tile multiples
+lives in the kernels themselves (pad-and-slice), so arbitrary shapes — e.g.
+the 197-token DeiT sequence — are first-class on every path.
 """
 from __future__ import annotations
 
@@ -43,14 +45,7 @@ def set_default_impl(impl: str):
     _DEFAULT_IMPL = impl
 
 
-def _pad_to(x, multiple, axis):
-    size = x.shape[axis]
-    pad = (-size) % multiple
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths)
+from repro.kernels.tpu_compat import pad_to_multiple as _pad_to
 
 
 # ---------------------------------------------------------------------------
@@ -72,12 +67,9 @@ def _shift_matmul_fwd_impl(x, w_packed, impl):
         y = _ref.shift_matmul_ref(x2, w_packed)
     else:
         m = x2.shape[0]
-        n = w_packed.shape[1]
         bm = min(_shiftmm.BM, -(-m // 8) * 8)  # sublane-aligned (multiple of 8)
-        xp = _pad_to(_pad_to(x2, bm, 0), _shiftmm.BK, 1)
-        wp = _pad_to(_pad_to(w_packed, _shiftmm.BK, 0), _shiftmm.BN, 1)
         y = _shiftmm.shift_matmul_pallas(
-            xp, wp, bm=bm, interpret=(impl == "interpret"))[:m, :n]
+            x2, w_packed, bm=bm, interpret=(impl == "interpret"))
     return y.reshape(*lead, -1)
 
 
@@ -109,15 +101,12 @@ def _add_matmul_fwd_impl(x, b, impl):
     impl = impl or default_impl()
     if impl == "xla":
         return _ref.add_matmul_ref(x, b)
-    g, m, k = x.shape
+    _, m, _ = x.shape
     n = b.shape[-1]
     bm = min(_addmm.BM, -(-m // 8) * 8)      # sublane-aligned
     bn = min(_addmm.BN, -(-n // 128) * 128)  # lane-aligned
-    xp = _pad_to(_pad_to(x, bm, 1), _addmm.BK, 2)
-    bp = _pad_to(_pad_to(b, _addmm.BK, 1), bn, 2)
-    y = _addmm.add_matmul_pallas(xp, bp, bm=bm, bn=bn,
-                                 interpret=(impl == "interpret"))
-    return y[:, :m, :n]
+    return _addmm.add_matmul_pallas(x, b, bm=bm, bn=bn,
+                                    interpret=(impl == "interpret"))
 
 
 def _add_matmul_vjp_fwd(x, b, impl):
@@ -146,18 +135,12 @@ def add_matmul_bitpacked(x, packed, impl=None):
     if impl == "xla":
         b = _pk.unpack_bits(packed, jnp.float32)
         return _ref.add_matmul_ref(x, b)
-    g, m, k = x.shape
+    _, m, _ = x.shape
     n = packed.shape[-1]
     bm = min(_pk.BM, -(-m // 8) * 8)
     bn = min(_pk.BN, -(-n // 128) * 128)
-    xp = _pad_to(_pad_to(x, bm, 1), _pk.BK8 * 8, 2)
-    # pad packed K8 rows with 0x55? No: zero bytes decode to -1 rows, which
-    # would corrupt the sum — pad x's K with zeros instead (0 * ±1 = 0) and
-    # the packed rows with anything; zeros are fine since x is zero there.
-    pp = _pad_to(_pad_to(packed, _pk.BK8, 1), bn, 2)
-    y = _pk.add_matmul_packed_pallas(xp, pp, bm=bm, bn=bn,
-                                     interpret=(impl == "interpret"))
-    return y[:, :m, :n]
+    return _pk.add_matmul_packed_pallas(x, packed, bm=bm, bn=bn,
+                                        interpret=(impl == "interpret"))
 
 
 # ---------------------------------------------------------------------------

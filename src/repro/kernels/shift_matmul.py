@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 from repro.kernels.tpu_compat import CompilerParams as _CompilerParams
+from repro.kernels.tpu_compat import pad_to_multiple as _pad_axis
 
 
 from repro.core.quant import P_MIN
@@ -56,14 +57,20 @@ def _shift_matmul_kernel(x_ref, sp_ref, o_ref, acc_ref):
 def shift_matmul_pallas(x, w_packed, *, bm=BM, bn=BN, bk=BK, interpret=False):
     """x: (M, K) float; w_packed: (K, N) int8. Returns (M, N) in x.dtype.
 
-    Shapes must be multiples of the block sizes — ops.shift_matmul pads.
+    Shapes need NOT be multiples of the block sizes: inputs are zero-padded
+    to the tile grid and the output sliced back. A padded packed byte decodes
+    to a tiny-but-nonzero power of two, which is harmless: x is zero-padded
+    over the same K rows, so every padded term is w · 0 = 0 and the sum is
+    exact. Padded M rows / N columns are discarded by the slice.
     """
     m, k = x.shape
     k2, n = w_packed.shape
     assert k == k2, (x.shape, w_packed.shape)
-    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (x.shape, w_packed.shape)
-    grid = (m // bm, n // bn, k // bk)
-    return pl.pallas_call(
+    x = _pad_axis(_pad_axis(x, bm, 0), bk, 1)
+    w_packed = _pad_axis(_pad_axis(w_packed, bk, 0), bn, 1)
+    (mp, kp), np_ = x.shape, w_packed.shape[1]
+    grid = (mp // bm, np_ // bn, kp // bk)
+    y = pl.pallas_call(
         _shift_matmul_kernel,
         grid=grid,
         in_specs=[
@@ -71,9 +78,10 @@ def shift_matmul_pallas(x, w_packed, *, bm=BM, bn=BN, bk=BK, interpret=False):
             pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, w_packed)
+    return y[:m, :n]

@@ -1,7 +1,21 @@
-"""Version compat for `jax.experimental.pallas.tpu` symbol renames."""
+"""Version compat for `jax.experimental.pallas.tpu` symbol renames, plus the
+tiny shared helpers every kernel module needs (leaf module: kernels/* and
+kernels/ops.py both import from here without cycles)."""
 from __future__ import annotations
 
 import jax.experimental.pallas.tpu as pltpu
+import jax.numpy as jnp
+
+
+def pad_to_multiple(x, multiple, axis):
+    """Zero-pad `axis` up to the next multiple (no-op when already aligned).
+    The pad-and-slice half of every kernel's arbitrary-shape support."""
+    pad = (-x.shape[axis]) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
 
 # jax renamed TPUCompilerParams -> CompilerParams across 0.4.x/0.5.x.
 CompilerParams = getattr(pltpu, "CompilerParams",

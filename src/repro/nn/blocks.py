@@ -49,7 +49,8 @@ def _make_feed(cfg, kind):
                   cfg.use_bias, dt, pdt)
             for ek in p.moe_experts
         ]
-        lat = energy.expert_latencies(1024, cfg.d_model, cfg.d_ff, p.moe_experts)
+        lat = energy.expert_latencies(energy.NOMINAL_MOE_TOKENS, cfg.d_model,
+                                      cfg.d_ff, p.moe_experts)
         return MoEPrimitives(cfg.d_model, cfg.d_ff, expert_kinds=p.moe_experts,
                              capacity_factor=cfg.moe_primitives_capacity,
                              latency_aware=p.latency_aware, router_noise=0.0,
@@ -105,6 +106,28 @@ class TransformerBlock:
         h2 = self.norm2(params["norm2"], x)
         ff, aux = self._apply_feed(params, h2, train)
         return x + ff, aux
+
+    # -- inference -----------------------------------------------------------
+    def _infer_feed(self, params, x):
+        if hasattr(self.feed, "infer"):
+            return self.feed.infer(params["feed"], x)
+        if self._feed_has_aux:
+            y, _ = self.feed(params["feed"], x, train=False)
+            return y
+        return self.feed(params["feed"], x)
+
+    def infer(self, params, x, positions=None):
+        """Aux-free inference forward: same residual wiring as __call__ with
+        train=False, but MoE feeds take their deterministic dispatch path
+        (clean-logit argmax, no rng, no balance/drop bookkeeping). Returns x
+        only — the serving engines jit this."""
+        h = self.norm1(params["norm1"], x)
+        mix = self.mixer(params["mixer"], h, positions=positions, train=False)
+        if self.parallel:
+            return x + mix + self._infer_feed(params, h)
+        x = x + mix
+        h2 = self.norm2(params["norm2"], x)
+        return x + self._infer_feed(params, h2)
 
     # -- decode ---------------------------------------------------------------
     def init_cache(self, batch, max_len, dtype=jnp.bfloat16):

@@ -35,13 +35,18 @@ def choose_groups(tokens: int, target_group=4096, min_groups=32) -> int:
     return 1
 
 
-def dispatch(xg, expert_idx, keep_gate, caps):
+def dispatch(xg, expert_idx, keep_gate, caps, stats=True):
     """Per-group sort-based dispatch, vmapped over the leading group axis.
 
     xg: (G, S, d); expert_idx: (G, S, k); keep_gate: (G, S, k) combine weights.
     caps: python list of per-expert capacities (static).
     Returns (buf (G, total, d), aux) where total = sum(caps); expert e owns
     rows [offset_e, offset_e + cap_e). aux carries what combine() needs.
+
+    stats=False is the inference path: aux carries only what combine() needs,
+    no tokens_per_expert / drop_fraction bookkeeping (the serving engine never
+    reads them, and leaving them out keeps the compiled program free of the
+    cross-group reductions).
     """
     n_exp = len(caps)
     offsets = [0]
@@ -70,10 +75,10 @@ def dispatch(xg, expert_idx, keep_gate, caps):
         return buf[:-1], slot, tok, w, counts, keep
 
     buf, slot, tok, w, counts, keep = jax.vmap(one)(xg, expert_idx, keep_gate)
-    aux = {"slot": slot, "tok": tok, "w": w,
-           "tokens_per_expert": jnp.sum(counts, axis=0),
-           "drop_fraction": 1.0 - jnp.mean(keep.astype(jnp.float32)),
-           "total": total}
+    aux = {"slot": slot, "tok": tok, "w": w, "total": total}
+    if stats:
+        aux["tokens_per_expert"] = jnp.sum(counts, axis=0)
+        aux["drop_fraction"] = 1.0 - jnp.mean(keep.astype(jnp.float32))
     return buf, aux
 
 

@@ -99,6 +99,21 @@ class ShiftAddViT:
         n = max(len(self.blocks), 1)
         return logits, {"balance_loss": bal / n, "drop_fraction": drop / n}
 
+    def infer(self, params, images):
+        """Inference fast path: images (B, H, W, C) → logits (B, n_classes).
+
+        The serving forward (repro.serve.vision jits this): no aux-loss
+        computation, and MoE feeds route deterministically on clean-logit
+        argmax — no rng anywhere, so two calls on the same batch return
+        identical logits.
+        """
+        x = self.patch_embed(params["patch_embed"],
+                             self.patchify(images).astype(self.mc.activation_dtype))
+        for blk, p in zip(self.blocks, params["blocks"]):
+            x = blk.infer(p, x, positions=None)
+        x = self.final_norm(params["final_norm"], x)
+        return self.head(params["head"], jnp.mean(x, axis=1))
+
     def loss(self, params, batch, train=True):
         logits, aux = self(params, batch["images"], train=train)
         logp = jax.nn.log_softmax(logits.astype(jnp.float32))
@@ -113,6 +128,7 @@ class ShiftAddViT:
     def convert_from(self, dense_model: "ShiftAddViT", dense_params, stage=2):
         """Reparameterize a pretrained dense ViT into this policy's structure.
 
+        stage 0: structural copy only (the dense arm of a policy sweep).
         stage 1: attention → (binary-)linear (+ shift projections if policy
                  says so); MLPs untouched.
         stage 2: + MLPs → shift or MoE-of-primitives (Mult expert = pretrained
@@ -121,6 +137,8 @@ class ShiftAddViT:
         assert dense_model.cfg.n_layers == self.cfg.n_layers
         p = self.cfg.policy
         out = jax.tree_util.tree_map(lambda x: x, dense_params)  # copy
+        if stage < 1:
+            return out
         for i, blk in enumerate(self.blocks):
             src = dense_params["blocks"][i]
             dst = dict(src)

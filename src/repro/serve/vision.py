@@ -1,0 +1,260 @@
+"""Batched ShiftAddViT inference engine — the paper's model, served.
+
+Three pieces (DESIGN: measure the paper's headline latency/energy claims
+end-to-end, not per-layer):
+
+- **Inference forward**: `ShiftAddViT.infer` — train=False fast path with
+  clean-logit argmax MoE routing, no rng, no aux-loss computation, and the
+  deterministic latency-aware capacities of `MoEPrimitives.capacities`.
+  Two calls on the same batch return identical logits.
+
+- **Shape-bucketed batch assembly** (`BucketedViTEngine`): a stream of
+  variable-size requests is padded into a small closed set of batch sizes
+  (default {1, 8, 32, 128}), so jit compiles exactly one program per bucket
+  and steady-state traffic never retraces. `trace_count` exposes the compile
+  counter the no-recompilation test asserts on. The padded image buffer is
+  engine-owned scratch and is donated to the jit'd forward on accelerators.
+
+- **Policy sweep** (`policy_sweep`): the same pretrained dense params pushed
+  through `convert_from` at stage 0/1/2, measured for batch latency,
+  throughput, and analytic per-image energy (`vit_energy_per_image`, built
+  from core.energy's Tab.-1 unit energies + data-movement terms). Drives
+  benchmarks/bench_vit.py → BENCH_vit.json and repro.launch.serve_vit.
+
+Batching note: MoE feeds route per token group with finite capacity, so under
+the shiftadd policy an image's logits can depend on its co-batched requests
+(tokens compete for expert slots; earlier rows win ties). Dense/stage-1
+policies are MoE-free and strictly per-image. Either way the engine is
+deterministic: identical batch in, identical logits out.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import energy
+from repro.core.policy import DENSE, SHIFTADD, STAGE1
+from repro.nn.vit import ShiftAddViT, ViTConfig
+
+DEFAULT_BUCKETS = (1, 8, 32, 128)
+
+
+class BucketedViTEngine:
+    """Pads variable-size image batches into jit-cached bucket shapes.
+
+    model/params: a ShiftAddViT and its (possibly convert_from'd) params.
+    buckets: allowed batch sizes, ascending. Requests larger than the biggest
+    bucket are split into max-bucket chunks, so any request size is served.
+    """
+
+    def __init__(self, model: ShiftAddViT, params, buckets=DEFAULT_BUCKETS):
+        assert len(buckets) > 0 and min(buckets) >= 1
+        self.model = model
+        self.params = params
+        self.buckets = tuple(sorted(set(int(b) for b in buckets)))
+        self.trace_count = 0        # incremented only when jit (re)traces
+        self.batches_served = 0
+        self.images_served = 0
+
+        def fwd(p, images):
+            self.trace_count += 1   # runs at trace time, not at execution
+            return model.infer(p, images)
+
+        # The padded buffer is engine-owned scratch — donate it where the
+        # backend supports donation (CPU donation only warns, so gate it).
+        self._donates = jax.default_backend() in ("tpu", "gpu")
+        self._fwd = jax.jit(fwd, donate_argnums=(1,) if self._donates else ())
+
+    def bucket_for(self, n: int) -> int:
+        """Smallest bucket that fits n (callers chunk to max bucket first)."""
+        for b in self.buckets:
+            if n <= b:
+                return b
+        return self.buckets[-1]
+
+    def warmup(self):
+        """Compile every bucket once so serving never pays a trace."""
+        c = self.model.cfg
+        shape = (c.image_size, c.image_size, c.in_channels)
+        for b in self.buckets:
+            jax.block_until_ready(
+                self._fwd(self.params, jnp.zeros((b,) + shape, jnp.float32)))
+        return self
+
+    def infer(self, images):
+        """images: (n, H, W, C), any n ≥ 1 → logits (n, n_classes).
+
+        Chunks to the max bucket, pads each chunk up to its bucket size and
+        slices the padding back off. Input dtype is canonicalized to the
+        float32 warmup dtype (jit caches key on dtype — a raw uint8 client
+        batch must not retrace). After warmup() this never recompiles.
+        """
+        images = jnp.asarray(images, jnp.float32)
+        n = images.shape[0]
+        if n == 0:
+            return jnp.zeros((0, self.model.cfg.n_classes), jnp.float32)
+        bmax = self.buckets[-1]
+        outs = []
+        start = 0
+        while start < n:
+            take = min(bmax, n - start)
+            bucket = self.bucket_for(take)
+            chunk = images[start:start + take]
+            if take < bucket:
+                pad = jnp.zeros((bucket - take,) + chunk.shape[1:], chunk.dtype)
+                chunk = jnp.concatenate([chunk, pad], axis=0)
+            elif self._donates:
+                # A full-bucket chunk can alias the caller's array (a
+                # full-range slice is the same buffer) — donation would
+                # invalidate it, so hand jit an engine-owned copy instead.
+                chunk = jnp.copy(chunk)
+            logits = self._fwd(self.params, chunk)
+            outs.append(logits[:take])
+            self.batches_served += 1
+            start += take
+        self.images_served += n
+        return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Analytic per-image energy under a policy (paper Tab. 1 / Tab. 3 view)
+# ---------------------------------------------------------------------------
+
+def vit_energy_per_image(cfg: ViTConfig) -> dict:
+    """Forward energy of one image under cfg.policy, in pJ.
+
+    Composes core.energy's per-op models (45 nm unit energies + DRAM
+    movement) over the actual architecture: patch embed, q/k/v/o projections
+    (dense vs shift), attention contractions (quadratic softmax vs the
+    linear/binary-linear Q(KᵀV) order), and MLPs (dense, shift, or the MoE —
+    whose token split follows the same inverse-latency capacity weights the
+    dispatcher uses).
+    """
+    p = cfg.policy
+    n, d, f, h = cfg.n_patches, cfg.d_model, cfg.d_ff, cfg.n_heads
+    dh = d // h
+    total = energy.matmul_energy(n, cfg.patch_size ** 2 * cfg.in_channels, d,
+                                 "fp16")                       # patch embed
+    if p.projections == "shift":
+        proj = energy.shift_matmul_energy
+    else:
+        proj = lambda m, k, nn: energy.matmul_energy(m, k, nn, "fp16")
+    if p.mlp == "moe_primitives":
+        # Same nominal token count and normalization the dispatcher's
+        # capacity split uses (nn/blocks, MoEPrimitives._capacity_weights),
+        # so the modeled Mult/Shift token split matches the one served.
+        moe_w = energy.inverse_latency_weights(energy.expert_latencies(
+            energy.NOMINAL_MOE_TOKENS, d, f, p.moe_experts))
+    for _ in range(cfg.n_layers):
+        for _ in range(4):                                     # q, k, v, o
+            total += proj(n, d, d)
+        for _ in range(h):
+            if p.attention == "binary_linear":
+                total += energy.add_matmul_energy(dh, n, dh)   # KᵀV (MatAdd)
+                total += energy.add_matmul_energy(n, dh, dh)   # Q(KᵀV)
+            elif p.attention == "linear":
+                total += energy.matmul_energy(dh, n, dh, "fp16")
+                total += energy.matmul_energy(n, dh, dh, "fp16")
+            else:
+                total += energy.matmul_energy(n, dh, n, "fp16")  # QKᵀ
+                total += energy.matmul_energy(n, n, dh, "fp16")  # AV
+        if p.mlp == "moe_primitives":
+            for kind, w in zip(p.moe_experts, moe_w):
+                t = max(1, round(n * w))
+                op = (energy.shift_matmul_energy if kind == "shift"
+                      else lambda m, k, nn: energy.matmul_energy(m, k, nn, "fp16"))
+                total += op(t, d, f)
+                total += op(t, f, d)
+        elif p.mlp == "shift":
+            total += energy.shift_matmul_energy(n, d, f)
+            total += energy.shift_matmul_energy(n, f, d)
+        else:
+            total += energy.matmul_energy(n, d, f, "fp16")
+            total += energy.matmul_energy(n, f, d, "fp16")
+    total += energy.matmul_energy(1, d, cfg.n_classes, "fp16")  # pooled head
+    return {"total_pj": total.total_pj, "compute_pj": total.compute_pj,
+            "dram_pj": total.dram_pj}
+
+
+# ---------------------------------------------------------------------------
+# Policy sweep: same pretrained dense weights, stage 0 / 1 / 2
+# ---------------------------------------------------------------------------
+
+SWEEP_POLICIES = {
+    # name → (policy, convert_from stage)
+    "dense": (DENSE, 0),
+    "stage1": (STAGE1, 1),
+    "shiftadd": (SHIFTADD, 2),
+}
+
+
+def build_policy_model(base_cfg: ViTConfig, name: str,
+                       dense_model: ShiftAddViT, dense_params):
+    """A (model, params) pair for one sweep arm: the base config re-policied
+    and the pretrained dense params pushed through the paper's conversion."""
+    policy, stage = SWEEP_POLICIES[name]
+    cfg = dataclasses.replace(base_cfg, policy=policy)
+    model = ShiftAddViT(cfg)
+    params = model.convert_from(dense_model, dense_params, stage=stage)
+    return model, params
+
+
+def policy_sweep(base_cfg: ViTConfig = None, batch=32, iters=10,
+                 buckets=None, seed=0, policies=tuple(SWEEP_POLICIES)):
+    """Measure every policy arm on the same pretrained dense weights.
+
+    Returns the BENCH_vit.json record: per-policy batch latency (median-free
+    mean over `iters` post-warmup runs), throughput, analytic energy per
+    image, and the engine's compile count.
+    """
+    base_cfg = base_cfg or ViTConfig()
+    buckets = tuple(buckets) if buckets else (1, 8, batch)
+    if batch not in buckets:
+        buckets = tuple(sorted(set(buckets) | {batch}))
+    dense_model = ShiftAddViT(dataclasses.replace(base_cfg, policy=DENSE))
+    dense_params = dense_model.init(jax.random.PRNGKey(seed))
+    imgs = jax.random.normal(
+        jax.random.PRNGKey(seed + 1),
+        (batch, base_cfg.image_size, base_cfg.image_size, base_cfg.in_channels))
+
+    record = {
+        "backend": jax.default_backend(),
+        "model": (f"shiftadd_vit({base_cfg.n_layers}L,{base_cfg.d_model}d,"
+                  f"{base_cfg.n_patches}p)"),
+        "image_size": base_cfg.image_size,
+        "batch": batch,
+        "buckets": list(buckets),
+        "iters": iters,
+        "policies": {},
+    }
+    from repro.kernels import ops
+    record["impl"] = ops.default_impl()
+    for name in policies:
+        model, params = build_policy_model(base_cfg, name, dense_model,
+                                           dense_params)
+        engine = BucketedViTEngine(model, params, buckets=buckets).warmup()
+        traces_after_warmup = engine.trace_count
+        jax.block_until_ready(engine.infer(imgs))   # bucket already compiled
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = engine.infer(imgs)
+        jax.block_until_ready(out)
+        latency_s = (time.perf_counter() - t0) / iters
+        e = vit_energy_per_image(model.cfg)
+        record["policies"][name] = {
+            "latency_s_per_batch": latency_s,
+            "images_per_s": batch / latency_s,
+            "energy_pj_per_image": e["total_pj"],
+            "energy_compute_pj": e["compute_pj"],
+            "energy_dram_pj": e["dram_pj"],
+            "compiles": engine.trace_count,
+            "recompiles_after_warmup": engine.trace_count - traces_after_warmup,
+        }
+    dense_e = record["policies"].get("dense", {}).get("energy_pj_per_image")
+    if dense_e:
+        for name, rec in record["policies"].items():
+            rec["energy_vs_dense"] = rec["energy_pj_per_image"] / dense_e
+    return record

@@ -82,3 +82,91 @@ def test_choose_groups(tokens, expect):
     g = choose_groups(tokens)
     assert g == expect
     assert tokens % g == 0
+
+
+# ---------------------------------------------------------------------------
+# Numpy oracle + property tests (satellite: dispatch/combine coverage)
+# ---------------------------------------------------------------------------
+
+def _np_dispatch_oracle(idx, caps):
+    """Reference bookkeeping: token-order keep mask + per-expert routed
+    counts (pre-capping, summed over groups) — what dispatch() must report."""
+    g, s, k = idx.shape
+    kept = np.zeros((g, s, k), bool)
+    counts = np.zeros(len(caps), np.int64)
+    for gi in range(g):
+        fill = [0] * len(caps)
+        for t in range(s):           # token-order priority, k-major within t
+            for kk in range(k):
+                e = int(idx[gi, t, kk])
+                counts[e] += 1
+                if fill[e] < caps[e]:
+                    kept[gi, t, kk] = True
+                    fill[e] += 1
+    return kept, counts
+
+
+def _check_exact_reconstruction(g, s, e, k, seed):
+    d = 4
+    xg, idx, gate = _route(g, s, d, e, k, seed)
+    caps = [s * k] * e               # capacities cover every token: no drops
+    buf, aux = dispatch(xg, idx, gate, caps)
+    assert float(aux["drop_fraction"]) == 0.0
+    y = combine(buf, aux, s, d)      # identity experts
+    expect = jnp.sum(gate[..., None] * xg[:, :, None, :], axis=2)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(expect))
+
+
+def _check_bookkeeping_oracle(g, s, e, k, cap, seed):
+    d = 4
+    xg, idx, gate = _route(g, s, d, e, k, seed)
+    caps = [cap] * e
+    _, aux = dispatch(xg, idx, gate, caps)
+    kept, counts = _np_dispatch_oracle(np.asarray(idx), caps)
+    np.testing.assert_array_equal(np.asarray(aux["tokens_per_expert"]), counts)
+    assert float(aux["drop_fraction"]) == pytest.approx(1.0 - kept.mean())
+
+
+def test_exact_reconstruction_examples():
+    """Deterministic arm of the property below (runs without hypothesis)."""
+    for seed, (g, s, e, k) in enumerate([(1, 8, 2, 1), (2, 16, 4, 2),
+                                         (3, 32, 3, 2)]):
+        _check_exact_reconstruction(g, s, e, k, seed)
+
+
+def test_bookkeeping_oracle_examples():
+    for seed, (g, s, e, k, cap) in enumerate([(1, 10, 2, 1, 3),
+                                              (2, 16, 3, 2, 4),
+                                              (1, 32, 4, 1, 2)]):
+        _check_bookkeeping_oracle(g, s, e, k, cap, seed)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 3), st.integers(4, 24), st.integers(2, 5),
+       st.integers(1, 2), st.integers(0, 10_000))
+def test_exact_reconstruction_property(g, s, e, k, seed):
+    """combine(dispatch(x)) == Σ_k gate_k · x EXACTLY whenever capacities
+    cover all tokens (identity experts; no droppage ⇒ bit-exact scatter)."""
+    _check_exact_reconstruction(g, s, e, k, seed)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 3), st.integers(4, 24), st.integers(2, 5),
+       st.integers(1, 2), st.integers(1, 6), st.integers(0, 10_000))
+def test_bookkeeping_matches_numpy_oracle(g, s, e, k, cap, seed):
+    """tokens_per_expert / drop_fraction under droppage must match the naive
+    numpy re-implementation of token-order capacity filling."""
+    _check_bookkeeping_oracle(g, s, e, k, cap, seed)
+
+
+def test_stats_false_skips_bookkeeping_but_combines_identically():
+    """The inference dispatch path: same buffer and combine aux, no stats."""
+    g, s, d, e, k = 2, 16, 8, 4, 1
+    xg, idx, gate = _route(g, s, d, e, k)
+    caps = [s] * e
+    buf_t, aux_t = dispatch(xg, idx, gate, caps, stats=True)
+    buf_i, aux_i = dispatch(xg, idx, gate, caps, stats=False)
+    assert "tokens_per_expert" not in aux_i and "drop_fraction" not in aux_i
+    np.testing.assert_array_equal(np.asarray(buf_t), np.asarray(buf_i))
+    np.testing.assert_array_equal(np.asarray(combine(buf_t, aux_t, s, d)),
+                                  np.asarray(combine(buf_i, aux_i, s, d)))

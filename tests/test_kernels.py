@@ -119,6 +119,65 @@ def test_linattn_kernel_returns_final_carry(b, h, n, dk, dv):
             _close(state[key], state_ref[key], tol=1e-3)
 
 
+PAD_SHAPES = [(197, 100, 60),      # DeiT token count: the shape that used to
+              (197, 192, 197),     # trip the m % bm hard-assert
+              (5, 7, 3), (130, 513, 129)]
+
+
+@pytest.mark.parametrize("m,k,n", PAD_SHAPES)
+def test_shift_matmul_pallas_self_pads(m, k, n):
+    """The Pallas entry point itself must pad-and-slice: direct calls with
+    tile-indivisible shapes (197-token ViT batches) match the oracle."""
+    from repro.kernels import shift_matmul as _shiftmm
+
+    w = jax.random.normal(jax.random.PRNGKey(0), (k, n)) * 0.05
+    wp = quant.pack_from_dense(w)
+    x = jax.random.normal(jax.random.PRNGKey(1), (m, k))
+    out = _shiftmm.shift_matmul_pallas(x, wp, interpret=True)
+    assert out.shape == (m, n)
+    _close(out, ref.shift_matmul_ref(x, wp))
+
+
+@pytest.mark.parametrize("g,m,k,n", [(1, 197, 64, 48), (2, 197, 100, 60),
+                                     (1, 3, 5, 2)])
+def test_add_matmul_pallas_self_pads(g, m, k, n):
+    from repro.kernels import add_matmul as _addmm
+
+    b = (jax.random.randint(jax.random.PRNGKey(2), (g, k, n), 0, 2, jnp.int8)
+         * 2 - 1).astype(jnp.int8)
+    x = jax.random.normal(jax.random.PRNGKey(3), (g, m, k))
+    out = _addmm.add_matmul_pallas(x, b, interpret=True)
+    assert out.shape == (g, m, n)
+    _close(out, ref.add_matmul_ref(x, b))
+
+
+@pytest.mark.parametrize("g,m,k,n", [(1, 197, 64, 48), (2, 33, 72, 60)])
+def test_add_matmul_packed_pallas_self_pads(g, m, k, n):
+    from repro.kernels import add_matmul_packed as _pk
+
+    b = (jax.random.randint(jax.random.PRNGKey(4), (g, k, n), 0, 2, jnp.int8)
+         * 2 - 1).astype(jnp.int8)
+    x = jax.random.normal(jax.random.PRNGKey(5), (g, m, k))
+    out = _pk.add_matmul_packed_pallas(x, _pk.pack_bits(b), interpret=True)
+    assert out.shape == (g, m, n)
+    _close(out, ref.add_matmul_ref(x, b))
+
+
+@pytest.mark.parametrize("m,k,n", [(197, 100, 60), (197, 192, 197)])
+def test_padded_vs_unpadded_parity(m, k, n):
+    """Padding must be invisible: the wrapper's answer on an odd shape equals
+    the answer computed on a manually pre-padded problem, sliced back."""
+    w = jax.random.normal(jax.random.PRNGKey(6), (k, n)) * 0.05
+    wp = quant.pack_from_dense(w)
+    x = jax.random.normal(jax.random.PRNGKey(7), (m, k))
+    out = ops.shift_matmul(x, wp, "interpret")
+    x_pad = jnp.pad(x, ((0, 256 - m), (0, 512 - k)))
+    wp_pad = jnp.pad(wp, ((0, 512 - k), (0, 256 - n)))
+    out_pad = ops.shift_matmul(x_pad, wp_pad, "interpret")[:m, :n]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_pad),
+                               rtol=1e-5, atol=1e-5)
+
+
 def test_linattn_kernel_state_locality():
     """Chunked kernel must equal the oracle even when the sequence spans many
     chunks (state carried in VMEM scratch across grid steps)."""

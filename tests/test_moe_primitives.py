@@ -95,6 +95,59 @@ def test_moe_grads_reach_router_and_both_experts():
         assert total > 0
 
 
+def test_capacities_cover_tokens_whenever_cf_ge_1():
+    """Structural guarantee: capacity_factor >= 1.0 ⇒ sum(caps) >= n_tokens,
+    for any latency skew, expert count and (small) group size — the rounding
+    + clamp regression surface."""
+    latency_sets = [
+        [1.0, 1.0], [3.0, 1.0], [1e-3, 1e-9], [1.0, 2.0, 40.0],
+        [5.0, 1.0, 0.1, 0.1],
+    ]
+    for lats in latency_sets:
+        kinds = tuple(["mult"] + ["shift"] * (len(lats) - 1))
+        for cf in (1.0, 1.25, 2.0):
+            moe = MoEPrimitives(8, 16, expert_kinds=kinds, latencies=lats,
+                                capacity_factor=cf)
+            for n in list(range(1, 65)) + [197, 1024]:
+                caps = moe.capacities(n)
+                assert sum(caps) >= n, (lats, cf, n, caps)
+                assert all(0 <= c <= n for c in caps), (lats, cf, n, caps)
+
+
+def test_no_drop_regression_at_capacity_factor_125():
+    """drop_fraction == 0 at capacity_factor 1.25 when the routed load fits
+    the capacity split — pins that small-group rounding never shrinks a cap
+    below its share."""
+    moe = MoEPrimitives(16, 32, capacity_factor=1.25, latency_aware=False)
+    params = moe.init(jax.random.PRNGKey(0))
+    # Steer routing deterministically: logits = x @ W with W sending tokens
+    # with x[:,0] > 0 to expert 0 and the rest to expert 1 — an exact 4/4
+    # split of 8 tokens against per-expert caps of ceil(1.25*8/2) = 5.
+    w = jnp.zeros((16, 2)).at[0, 0].set(4.0).at[0, 1].set(-4.0)
+    params = dict(params, router={"kernel": w})
+    sign = jnp.repeat(jnp.asarray([1.0, -1.0]), 4)[:, None]
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 16)) * 0.1
+    x = x.at[:, 0].set(sign[:, 0])
+    caps = moe.capacities(8)
+    assert sum(caps) >= 8 and min(caps) >= 4
+    y, aux = moe(params, x, train=False)
+    assert float(aux["drop_fraction"]) == 0.0
+
+
+def test_infer_matches_call_and_is_deterministic():
+    """The inference dispatch path must equal the train=False forward and be
+    bit-stable across calls (no rng consumed anywhere)."""
+    moe = _moe()
+    params = moe.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (30, 16))
+    y_call, _aux = moe(params, x, train=False)
+    y_inf = moe.infer(params, x)
+    np.testing.assert_allclose(np.asarray(y_inf), np.asarray(y_call),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(moe.infer(params, x)),
+                                  np.asarray(y_inf))
+
+
 def test_custom_experts_and_latencies():
     from repro.nn.layers import MLP
 

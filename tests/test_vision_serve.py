@@ -1,0 +1,132 @@
+"""Batched ShiftAddViT serving: the inference fast path, the shape-bucketed
+engine (no recompilation after warmup — the acceptance criterion), and the
+policy sweep's modeled-energy ordering."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.policy import DENSE, SHIFTADD, STAGE1
+from repro.nn.vit import ShiftAddViT, ViTConfig
+from repro.serve.vision import (BucketedViTEngine, build_policy_model,
+                                policy_sweep, vit_energy_per_image)
+
+
+def _vit(policy=DENSE, **kw):
+    cfg = ViTConfig(image_size=16, patch_size=4, n_layers=2, d_model=32,
+                    n_heads=2, d_ff=64, policy=policy, **kw)
+    model = ShiftAddViT(cfg)
+    return model, model.init(jax.random.PRNGKey(0)), cfg
+
+
+def _imgs(n, seed=0, size=16):
+    return jax.random.normal(jax.random.PRNGKey(seed), (n, size, size, 3))
+
+
+@pytest.mark.parametrize("policy", [DENSE, STAGE1, SHIFTADD])
+def test_infer_matches_train_false_call(policy):
+    """The aux-free fast path must compute the same logits as the full
+    forward with train=False (router noise off, clean-logit argmax)."""
+    model, params, _ = _vit(policy)
+    imgs = _imgs(6)
+    fast = model.infer(params, imgs)
+    full, _aux = model(params, imgs, train=False)
+    np.testing.assert_allclose(np.asarray(fast), np.asarray(full),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_infer_deterministic_without_rng():
+    """Two inference calls, identical logits, no rng anywhere — pins the
+    no-noise/no-sampling property the serving engine relies on."""
+    model, params, _ = _vit(SHIFTADD)
+    imgs = _imgs(8, seed=3)
+    a = model.infer(params, imgs)
+    b = model.infer(params, imgs)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_engine_padding_is_transparent():
+    """Padded rows must not change real images' logits. Stage-1 policy is
+    MoE-free, so per-image independence is exact and the engine's padded
+    bucket must agree with a direct unpadded forward."""
+    model, params, _ = _vit(STAGE1)
+    engine = BucketedViTEngine(model, params, buckets=(1, 4, 8))
+    imgs = _imgs(5, seed=7)
+    got = engine.infer(imgs)                       # padded to bucket 8
+    want = model.infer(params, imgs)               # unpadded batch of 5
+    assert got.shape == (5, 10)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_no_recompilation_after_warmup():
+    """Mixed request sizes over warm buckets must never retrace — the
+    compile-count acceptance criterion."""
+    model, params, _ = _vit(SHIFTADD)
+    engine = BucketedViTEngine(model, params, buckets=(1, 4, 8)).warmup()
+    assert engine.trace_count == 3                 # one program per bucket
+    for i, n in enumerate((3, 1, 8, 5, 2, 7, 20)):  # 20 > max bucket: chunked
+        out = engine.infer(_imgs(n, seed=20 + i))
+        assert out.shape == (n, 10)
+    # Non-float32 client input must be canonicalized, not retraced.
+    engine.infer(jnp.zeros((4, 16, 16, 3), jnp.uint8))
+    engine.infer(jnp.zeros((2, 16, 16, 3), jnp.bfloat16))
+    assert engine.trace_count == 3, "bucketed serving retraced after warmup"
+
+
+def test_engine_bucket_selection_and_chunking():
+    model, params, _ = _vit(DENSE)
+    engine = BucketedViTEngine(model, params, buckets=(1, 4, 8))
+    assert engine.bucket_for(1) == 1
+    assert engine.bucket_for(3) == 4
+    assert engine.bucket_for(8) == 8
+    assert engine.bucket_for(30) == 8              # chunked by infer()
+    out = engine.infer(_imgs(19))
+    assert out.shape == (19, 10)
+    assert engine.images_served == 19
+    assert engine.batches_served == 3              # 8 + 8 + 3→bucket 4
+
+
+def test_modeled_energy_ordering():
+    """The analytic energy model must reproduce the paper's ordering on the
+    default config: each reparameterization stage strictly cuts energy."""
+    cfg = ViTConfig()
+    e = {name: vit_energy_per_image(dataclasses.replace(cfg, policy=p))
+         for name, p in (("dense", DENSE), ("stage1", STAGE1),
+                         ("shiftadd", SHIFTADD))}
+    assert e["shiftadd"]["total_pj"] < e["stage1"]["total_pj"] < e["dense"]["total_pj"]
+
+
+def test_policy_sweep_record_shape_and_energy_claim():
+    """The BENCH_vit.json record: all three policy arms with latency+energy,
+    shiftadd strictly below dense in modeled energy, zero recompiles."""
+    cfg = ViTConfig(image_size=16, patch_size=4, n_layers=2, d_model=32,
+                    n_heads=2, d_ff=64)
+    rec = policy_sweep(cfg, batch=8, iters=2, buckets=(8,))
+    assert set(rec["policies"]) == {"dense", "stage1", "shiftadd"}
+    for r in rec["policies"].values():
+        assert r["latency_s_per_batch"] > 0
+        assert r["images_per_s"] > 0
+        assert r["energy_pj_per_image"] > 0
+        assert r["recompiles_after_warmup"] == 0
+    assert (rec["policies"]["shiftadd"]["energy_pj_per_image"]
+            < rec["policies"]["dense"]["energy_pj_per_image"])
+
+
+def test_sweep_arms_share_pretrained_weights():
+    """Every sweep arm must be a conversion of the SAME dense weights —
+    the paper's reparameterize-not-retrain premise."""
+    cfg = ViTConfig(image_size=16, patch_size=4, n_layers=2, d_model=32,
+                    n_heads=2, d_ff=64)
+    dense_model = ShiftAddViT(dataclasses.replace(cfg, policy=DENSE))
+    dense_params = dense_model.init(jax.random.PRNGKey(0))
+    _, s1 = build_policy_model(cfg, "stage1", dense_model, dense_params)
+    _, s2 = build_policy_model(cfg, "shiftadd", dense_model, dense_params)
+    w = np.asarray(dense_params["blocks"][0]["mixer"]["q"]["kernel"])
+    np.testing.assert_array_equal(
+        w, np.asarray(s1["blocks"][0]["mixer"]["q"]["kernel"]))
+    # shiftadd projections are shift-reparameterized latents of the same w
+    np.testing.assert_array_equal(
+        w, np.asarray(s2["blocks"][0]["mixer"]["q"]["w_latent"]))

@@ -74,6 +74,60 @@ def test_stage1_conversion_preserves_mlp():
     np.testing.assert_array_equal(w_src, w_dst)
 
 
+def test_stage1_conversion_matches_pure_linear_attention_at_init():
+    """The dwconv-zero-init invariant: a stage-1 converted model's forward at
+    init must equal the pure (binary-)linear attention of the pretrained
+    weights — i.e. the same policy WITHOUT the DWConv branch run directly on
+    the unconverted dense params."""
+    dense_model, dense_params, _ = _vit(DENSE)
+    s1_model, _, _ = _vit(STAGE1)                     # dwconv_v=True (default)
+    converted = s1_model.convert_from(dense_model, dense_params, stage=1)
+    nodw_model, _, _ = _vit(dataclasses.replace(STAGE1, dwconv_v=False))
+    imgs = jnp.asarray(SyntheticImageData(image_size=16, global_batch=4)
+                       .batch_at(0)["images"])
+    got, _ = s1_model(converted, imgs, train=False)
+    want, _ = nodw_model(dense_params, imgs, train=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_stage2_moe_preserves_mult_expert_forward_exactly():
+    """The converted MoE's Mult expert must BE the pretrained MLP: identical
+    forward on arbitrary token batches, bit for bit."""
+    dense_model, dense_params, _ = _vit(DENSE)
+    sa_model, _, _ = _vit(SHIFTADD)
+    converted = sa_model.convert_from(dense_model, dense_params, stage=2)
+    x = jax.random.normal(jax.random.PRNGKey(5), (1, 9, 32))
+    for i in range(len(sa_model.blocks)):
+        mult = sa_model.blocks[i].feed.experts[0]
+        got = mult(converted["blocks"][i]["feed"]["experts"][0], x)
+        want = dense_model.blocks[i].feed(dense_params["blocks"][i]["feed"], x)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_converted_inference_mode_is_deterministic():
+    """Inference forward on a converted model: two calls, identical logits,
+    no rng required (clean-logit argmax routing end to end)."""
+    dense_model, dense_params, _ = _vit(DENSE)
+    sa_model, _, _ = _vit(SHIFTADD)
+    converted = sa_model.convert_from(dense_model, dense_params, stage=2)
+    imgs = jnp.asarray(SyntheticImageData(image_size=16, global_batch=4)
+                       .batch_at(0)["images"])
+    a = sa_model.infer(converted, imgs)
+    b = sa_model.infer(converted, imgs)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert np.isfinite(np.asarray(a)).all()
+
+
+def test_stage0_conversion_is_identity():
+    dense_model, dense_params, _ = _vit(DENSE)
+    sa_model, _, _ = _vit(SHIFTADD)
+    out = sa_model.convert_from(dense_model, dense_params, stage=0)
+    for a, b in zip(jax.tree_util.tree_leaves(out),
+                    jax.tree_util.tree_leaves(dense_params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 def test_shift_packed_roundtrip_function():
     """latent → packed freeze preserves the quantized forward exactly."""
     from repro.core.shift_linear import ShiftLinear
