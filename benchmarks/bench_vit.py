@@ -3,14 +3,25 @@ paper's headline claim (latency + energy reduction vs the dense ViT) has a
 per-PR trajectory, next to BENCH_serve.json's LM numbers.
 
     PYTHONPATH=src python benchmarks/bench_vit.py [--batch 32]
+    PYTHONPATH=src python benchmarks/bench_vit.py --no-freeze   # A/B arm
+    PYTHONPATH=src python benchmarks/bench_vit.py --breakdown   # per-component
+    PYTHONPATH=src python benchmarks/bench_vit.py --impl interpret
 
 One set of pretrained dense weights is pushed through `convert_from` at
 stage 0 (dense), stage 1 (binary-linear attention) and stage 2 (+ MoE of
 Mult/Shift primitives), then served through the shape-bucketed inference
-engine. Reported per policy: batch latency, throughput, analytic per-image
-energy (paper Tab. 1 unit energies + DRAM movement), and the engine's
-compile counts (recompiles_after_warmup must be 0 — asserted in
-tests/test_vision_serve.py).
+engine with the deployment freeze on (default) or off (`--no-freeze`).
+Default geometry is DeiT-T-like: 196 tokens (56×56 image, patch 4) — the
+sequence length the paper's serving claim is made at; `--image-size 32`
+reproduces the old toy scale.
+
+Reported per policy: batch latency (median), throughput, analytic per-image
+energy (paper Tab. 1 unit energies + DRAM movement), the engine's compile
+counts (recompiles_after_warmup must be 0 — gated in CI), the freeze state,
+and the latency ratio vs the dense arm (`shiftadd_vs_dense_latency` is the
+paper's crossover, gated ≤ 1.0 in the acceptance criteria). `--breakdown`
+adds measured attention / MLP-MoE / dispatch / other component rows in
+bench_breakdown.py's table style.
 """
 from __future__ import annotations
 
@@ -29,16 +40,52 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--batch", type=int, default=32)
     ap.add_argument("--iters", type=int, default=10)
-    ap.add_argument("--image-size", type=int, default=32)
+    ap.add_argument("--image-size", type=int, default=56,
+                    help="56 → 196 tokens at patch 4 (DeiT-T-like)")
     ap.add_argument("--layers", type=int, default=4)
     ap.add_argument("--d-model", type=int, default=128)
-    ap.add_argument("--out", default=os.path.join(
-        os.path.dirname(__file__), "..", "BENCH_vit.json"))
+    ap.add_argument("--impl", choices=["xla", "pallas", "interpret"],
+                    default=None,
+                    help="force the kernel implementation (CI uses this to "
+                         "exercise the interpret path)")
+    ap.add_argument("--no-freeze", action="store_true",
+                    help="serve the live params instead of the DeployPlan "
+                         "(the A/B arm of the freeze benchmark)")
+    ap.add_argument("--ab-freeze", action="store_true",
+                    help="run the interleaved frozen-vs-live A/B of the "
+                         "shiftadd arm instead of the policy sweep (the CI "
+                         "freeze gate's measurement; noise-robust)")
+    ap.add_argument("--breakdown", action="store_true",
+                    help="add measured attention/MLP-MoE/dispatch/other rows")
+    ap.add_argument("--out", default=None,
+                    help="output path (default: BENCH_vit.json, or "
+                         "BENCH_vit_freeze_ab.json under --ab-freeze)")
     args = ap.parse_args()
+    if args.out is None:
+        name = "BENCH_vit_freeze_ab.json" if args.ab_freeze else "BENCH_vit.json"
+        args.out = os.path.join(os.path.dirname(__file__), "..", name)
+
+    if args.impl:
+        from repro.kernels import ops
+        ops.set_default_impl(args.impl)
 
     cfg = ViTConfig(image_size=args.image_size, n_layers=args.layers,
                     d_model=args.d_model, d_ff=2 * args.d_model)
-    rec = policy_sweep(cfg, batch=args.batch, iters=args.iters)
+    if args.ab_freeze:
+        from repro.serve.vision import freeze_ab
+        rec = freeze_ab(cfg, batch=args.batch, iters=max(args.iters, 15))
+        with open(args.out, "w") as f:
+            json.dump(rec, f, indent=2)
+        print(f"freeze A/B ({rec['policy']}): frozen "
+              f"{rec['frozen_latency_s'] * 1e3:.2f} ms vs live "
+              f"{rec['live_latency_s'] * 1e3:.2f} ms "
+              f"({rec['frozen_vs_live']:.3f}x, interleaved, "
+              f"recompiles={rec['recompiles_after_warmup']})")
+        print(f"wrote {os.path.abspath(args.out)}")
+        return
+    rec = policy_sweep(cfg, batch=args.batch, iters=args.iters,
+                       freeze=not args.no_freeze, impl=args.impl,
+                       breakdown=args.breakdown)
     with open(args.out, "w") as f:
         json.dump(rec, f, indent=2)
 
@@ -47,8 +94,28 @@ def main():
         print(f"{name:>9}: {r['latency_s_per_batch'] * 1e3:8.2f} ms/batch  "
               f"{r['images_per_s']:9.1f} img/s  "
               f"{r['energy_pj_per_image'] / 1e6:8.3f} uJ/img  "
-              f"({r['energy_pj_per_image'] / dense['energy_pj_per_image']:.2f}x "
-              f"dense energy, recompiles={r['recompiles_after_warmup']})")
+              f"({r['latency_vs_dense']:.2f}x dense latency, "
+              f"{r['energy_pj_per_image'] / dense['energy_pj_per_image']:.2f}x "
+              f"dense energy, frozen={r['frozen']}, "
+              f"recompiles={r['recompiles_after_warmup']})")
+    if args.breakdown:
+        # bench_breakdown.py row style: name, microseconds, notes. The
+        # additive split is attention + mlp_moe + other; dispatch is a
+        # SUBSET of mlp_moe (routing machinery re-measured in isolation),
+        # so its row is annotated as such rather than given a fraction.
+        for name, r in rec["policies"].items():
+            bd = r["breakdown"]
+            for comp in ("attention", "mlp_moe", "other"):
+                frac = bd[f"{comp}_s"] / bd["total_s"] if bd["total_s"] else 0
+                print(",".join(str(c) for c in (
+                    f"serve_{name}_{comp}", bd[f"{comp}_s"] * 1e6,
+                    f"fraction_of_total={frac:.2f}")))
+            print(",".join(str(c) for c in (
+                f"serve_{name}_dispatch", bd["dispatch_s"] * 1e6,
+                "subset_of_mlp_moe")))
+    if "shiftadd_vs_dense_latency" in rec:
+        print(f"shiftadd vs dense latency: "
+              f"{rec['shiftadd_vs_dense_latency']:.3f}x (frozen={rec['frozen']})")
     print(f"wrote {os.path.abspath(args.out)}")
 
 

@@ -1,0 +1,77 @@
+"""CI gate for the ShiftAddViT serving benchmarks (vit-serve job).
+
+    python benchmarks/check_vit_freeze.py BENCH_vit.json BENCH_vit_freeze_ab.json
+
+BENCH_vit.json is the headline frozen policy sweep (bench_vit.py default);
+BENCH_vit_freeze_ab.json is the interleaved frozen-vs-live A/B
+(bench_vit.py --ab-freeze — both arms timed in alternating rounds in one
+process, so shared-runner load drift cancels instead of swamping the freeze
+effect).
+
+Fails (exit 1) if:
+- any arm in either record recompiled after warmup, or
+- the frozen shiftadd arm is slower than the live (unfrozen) arm beyond a
+  small noise margin — a real regression (the per-forward po2 decode landing
+  back in the hot loop) costs well over the margin, or
+- the headline record's frozen shiftadd latency exceeds dense (the paper's
+  crossover, the PR's acceptance criterion).
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+NOISE_MARGIN = 1.05
+
+
+def main(argv):
+    if len(argv) != 3:
+        print(__doc__)
+        return 2
+    headline = json.load(open(argv[1]))
+    ab = json.load(open(argv[2]))
+
+    failures = []
+    for name, r in headline.get("policies", {}).items():
+        if r["recompiles_after_warmup"] > 0:
+            failures.append(
+                f"{argv[1]}: policy {name} recompiled after warmup "
+                f"({r['recompiles_after_warmup']} extra traces)")
+    if ab.get("recompiles_after_warmup", 1) > 0:
+        failures.append(f"{argv[2]}: A/B engines recompiled after warmup")
+
+    ratio_ab = ab.get("frozen_vs_live")
+    if ratio_ab is None:
+        failures.append(f"{argv[2]} is not an --ab-freeze record")
+    else:
+        print(f"freeze A/B ({ab.get('policy')}): frozen "
+              f"{ab['frozen_latency_s'] * 1e3:.2f} ms vs live "
+              f"{ab['live_latency_s'] * 1e3:.2f} ms ({ratio_ab:.3f}x)")
+        if ratio_ab > NOISE_MARGIN:
+            failures.append(
+                f"frozen shiftadd is slower than unfrozen "
+                f"({ratio_ab:.3f}x > {NOISE_MARGIN}x noise margin)")
+
+    ratio = headline.get("shiftadd_vs_dense_latency")
+    if not headline.get("frozen", False):
+        failures.append("headline record must be the frozen arm")
+    if ratio is None:
+        failures.append("headline record has no shiftadd_vs_dense_latency "
+                        "(dense or shiftadd arm missing from the sweep)")
+    else:
+        print(f"headline shiftadd vs dense latency: {ratio:.3f}x "
+              f"(frozen={headline.get('frozen')})")
+        if ratio > 1.0:
+            failures.append(f"frozen shiftadd is not at-or-below dense "
+                            f"latency ({ratio:.3f}x > 1.0)")
+
+    for f in failures:
+        print(f"FAIL: {f}")
+    if failures:
+        return 1
+    print("freeze gate OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -152,15 +152,12 @@ def init_decode_state(batch, heads, dk, dv, dtype=jnp.float32):
 
 
 def binary_linear_attention_step(q_t, k_t, v_t, state, feature="binary"):
-    """One decode step. q_t/k_t: (B,H,Dk), v_t: (B,H,Dv). Causal incl. self."""
-    if feature == "binary":
-        d = q_t.shape[-1]
-        bq = jnp.where(q_t >= 0, 1.0, -1.0).astype(q_t.dtype)
-        bk = jnp.where(k_t >= 0, 1.0, -1.0).astype(k_t.dtype)
-    else:
-        d = 0.0
-        bq = jax.nn.elu(q_t) + 1.0
-        bk = jax.nn.elu(k_t) + 1.0
+    """One decode step. q_t/k_t: (B,H,Dk), v_t: (B,H,Dv). Causal incl. self.
+
+    Featurization goes through the same `_featurize` as the chunked path, so
+    the decode step and prefill can never diverge on the code definition.
+    """
+    bq, bk, d = _featurize(q_t, k_t, feature)
     kv = state["kv"] + bk[..., :, None] * v_t[..., None, :]
     ksum = state["ksum"] + bk
     vsum = state["vsum"] + v_t

@@ -105,6 +105,7 @@ class MoEPrimitives:
         self.router_noise = router_noise
         self.dtype = dtype
         self.name = name
+        self._capacity_plans = {}   # n_tokens → (caps, offsets) memo
         self.router = Dense(d_model, self.n_experts, use_bias=False,
                             dtype=jnp.float32, param_dtype=jnp.float32)
         if experts is not None:
@@ -172,6 +173,21 @@ class MoEPrimitives:
                 deficit -= bump
         return caps
 
+    def capacity_plan(self, n_tokens: int):
+        """Memoized (caps, offsets) for a per-group token count — the static
+        capacity math hoisted out of every trace. `core.deploy`'s
+        prepare_inference warms this for the serving buckets at engine-build
+        time; cold lookups still compute (and memoize) on first trace."""
+        plan = self._capacity_plans.get(n_tokens)
+        if plan is None:
+            caps = self.capacities(n_tokens)
+            offsets = [0]
+            for c in caps:
+                offsets.append(offsets[-1] + c)
+            plan = (tuple(caps), tuple(offsets[:-1]))
+            self._capacity_plans[n_tokens] = plan
+        return plan
+
     # -- forward ------------------------------------------------------------
     def _run_experts(self, params, buf, daux, caps, s):
         """Run each expert on its static row segment of the dispatch buffer
@@ -189,38 +205,80 @@ class MoEPrimitives:
         expert_out = jnp.concatenate(outs, axis=1)               # (G, total, d)
         return combine(expert_out, daux, s, self.d_model)
 
+    @staticmethod
+    def _gates(select_logits, clean_logits):
+        """THE gating rule, single home for train and serving: top-1 on
+        `select_logits` (noisy while training, clean at inference), gate from
+        the clean softmax. Returns (probs (G,S,E), top1 (G,S), gate (G,S,1))."""
+        probs = jax.nn.softmax(clean_logits, axis=-1)
+        top1 = jnp.argmax(select_logits, axis=-1)
+        gate = jnp.take_along_axis(probs, top1[..., None], axis=-1)
+        return probs, top1, gate
+
     def _route_dispatch(self, params, xg, select_logits, clean_logits, stats):
-        """Shared routing: top-1 selection on `select_logits` (noisy while
-        training, clean at inference), gates from the clean softmax, then
-        capacity dispatch. Single home for the gating math so the train and
-        serving paths can never diverge."""
+        """Training routing: `_gates` then sort-based capacity dispatch. The
+        serving path (`infer`) consumes the same `_gates` via `_route_infer`
+        with the gather-ordered dispatch."""
         from repro.nn.dispatch import dispatch
 
         s = xg.shape[1]
-        probs = jax.nn.softmax(clean_logits, axis=-1)
-        top1 = jnp.argmax(select_logits, axis=-1)                # (G,S)
-        gate = jnp.take_along_axis(probs, top1[..., None], axis=-1)
-        caps = self.capacities(s)
+        probs, top1, gate = self._gates(select_logits, clean_logits)
+        caps, _ = self.capacity_plan(s)
         buf, daux = dispatch(xg.astype(self.dtype), top1[..., None],
                              gate.astype(jnp.float32), caps, stats=stats)
         return probs, top1, caps, buf, daux
+
+    def _route_infer(self, params, xg):
+        """Clean-logit argmax routing for serving (no noise, no rng): the
+        shared `_gates` rule with clean logits on both slots. Returns
+        (top1 (G,S), gate (G,S))."""
+        clean_logits = self.router(params["router"], xg.astype(jnp.float32))
+        _, top1, gate = self._gates(clean_logits, clean_logits)
+        return top1, gate[..., 0].astype(jnp.float32)
+
+    def _dispatch_tokens(self, params, x):
+        """Shared serving front half: group → route (clean argmax) →
+        gather-ordered dispatch. Returns (buf, info, segments, ungroup) with
+        `segments` the per-expert static views of the buffer. Single home so
+        `infer` and the breakdown probe `dispatch_only` can never diverge on
+        the dispatch they measure/serve."""
+        from repro.nn.dispatch import dispatch_infer, group_tokens
+
+        xg, ungroup = group_tokens(x, self.d_model)
+        _, s, _ = xg.shape
+        top1, gate = self._route_infer(params, xg)
+        caps, offsets = self.capacity_plan(s)
+        buf, info = dispatch_infer(xg.astype(self.dtype), top1, gate, caps)
+        segments = [buf[:, off:off + cap, :]
+                    for off, cap in zip(offsets, caps)]
+        return buf, info, segments, ungroup
 
     def infer(self, params, x):
         """Deterministic inference dispatch — the serving fast path.
 
         Routes on clean-logit argmax (no router noise, no rng) with the same
         static latency-aware capacities as training, and computes none of the
-        aux/LL-loss statistics. Two calls on the same input produce identical
-        outputs. Returns y only.
+        aux/LL-loss statistics. Dispatch is the gather-ordered segment path
+        (nn.dispatch.dispatch_infer): no scatter-into-zeros, experts consume
+        per-expert static views, the combine is a per-token gather — and the
+        capacity/offset math comes from the memoized `capacity_plan` (warmed
+        by core.deploy at engine build). Two calls on the same input produce
+        identical outputs. Returns y only.
         """
-        from repro.nn.dispatch import group_tokens
+        from repro.nn.dispatch import combine_infer
 
-        xg, ungroup = group_tokens(x, self.d_model)
-        _, s, _ = xg.shape
-        clean_logits = self.router(params["router"], xg.astype(jnp.float32))
-        _, _, caps, buf, daux = self._route_dispatch(
-            params, xg, clean_logits, clean_logits, stats=False)
-        return ungroup(self._run_experts(params, buf, daux, caps, s)).astype(x.dtype)
+        _, info, segments, ungroup = self._dispatch_tokens(params, x)
+        outs = [expert(params["experts"][i], seg)
+                for i, (expert, seg) in enumerate(zip(self.experts, segments))]
+        return ungroup(combine_infer(outs, info)).astype(x.dtype)
+
+    def dispatch_only(self, params, x):
+        """Routing + dispatch + combine with identity experts — isolates the
+        dispatch machinery's cost for the component-breakdown benchmark."""
+        from repro.nn.dispatch import combine_infer
+
+        _, info, segments, ungroup = self._dispatch_tokens(params, x)
+        return ungroup(combine_infer(segments, info)).astype(x.dtype)
 
     def __call__(self, params, x, train=True, rng=None):
         """x: (..., d_model). Tokens are routed in sharded groups

@@ -68,7 +68,14 @@ class ShiftLinear:
 
     def __call__(self, params, x):
         x = x.astype(self.dtype)
-        if "w_latent" in params:
+        if "w_deploy" in params:
+            # Deployment-frozen XLA path (core.deploy.prepare_inference): the
+            # s·2^P weight was decoded ONCE at engine build; the forward is a
+            # plain dot — no per-call fake-quant / packed-decode in the jitted
+            # program. Value-identical to both unfrozen paths below (the
+            # decode is bit-exact), so frozen inference has exact logit parity.
+            y = jnp.dot(x, params["w_deploy"].astype(self.dtype))
+        elif "w_latent" in params:
             w_q = quant.po2_quantize_ste(params["w_latent"]).astype(self.dtype)
             y = jnp.dot(x, w_q)
         else:

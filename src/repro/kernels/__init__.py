@@ -6,6 +6,9 @@
   (paper Fig. 5).
 - linear_attention.py — fused chunked causal binary linear attention with the
   (d_k × d_v) running state resident in VMEM (paper §4.1 on the Q(KᵀV) path).
+- bidir_linear_attention.py — fused bidirectional (encoder/ViT) form: one
+  pass per (batch·head) accumulating KV/ksum then emitting outputs, codes in
+  VMEM; plus the no-STE sign-trick XLA twin the serving path uses off-TPU.
 
 ops.py holds the jit'd wrappers (padding + impl selection + custom VJPs);
 ref.py the pure-jnp oracles every kernel is tested against.

@@ -144,6 +144,37 @@ def add_matmul_bitpacked(x, packed, impl=None):
 
 
 # ---------------------------------------------------------------------------
+# fused bidirectional (encoder) binary linear attention
+# ---------------------------------------------------------------------------
+
+def binary_linear_attention_bidir(q, k, v, *, impl=None):
+    """q, k: (B, H, N, Dk); v: (B, H, N, Dv) → (B, H, N, Dv). Non-causal —
+    the ViT/encoder serving form of the Hamming-kernel attention.
+
+    Inference-only (no VJP; training uses repro.core.add_attention, whose STE
+    machinery this path exists to skip). impl="xla" runs the sign-trick twin;
+    pallas/interpret run the fused single-pass kernel with codes in VMEM.
+    """
+    from repro.kernels import bidir_linear_attention as _bidir
+
+    impl = impl or default_impl()
+    if impl == "xla":
+        return _bidir.bidir_binary_attention_xla(q, k, v)
+    b, h, n, dk = q.shape
+    dv = v.shape[-1]
+    qg = q.reshape(b * h, n, dk)
+    kg = k.reshape(b * h, n, dk)
+    vg = v.reshape(b * h, n, dv)
+    # Lane-align head dims and sublane-align N; the kernel masks both.
+    qp = _pad_to(_pad_to(qg, 128, 2), 8, 1)
+    kp = _pad_to(_pad_to(kg, 128, 2), 8, 1)
+    vp = _pad_to(_pad_to(vg, 128, 2), 8, 1)
+    out = _bidir.bidir_binary_attention_pallas(
+        qp, kp, vp, dk_true=dk, n_true=n, interpret=(impl == "interpret"))
+    return out[:, :n, :dv].reshape(b, h, n, dv)
+
+
+# ---------------------------------------------------------------------------
 # fused causal binary linear attention
 # ---------------------------------------------------------------------------
 

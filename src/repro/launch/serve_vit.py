@@ -44,14 +44,26 @@ def main():
     ap.add_argument("--image-size", type=int, default=32)
     ap.add_argument("--layers", type=int, default=4)
     ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--impl", choices=["xla", "pallas", "interpret"],
+                    default=None,
+                    help="force the kernel implementation (CI forces "
+                         "interpret to run the Pallas kernel bodies on CPU)")
+    ap.add_argument("--no-freeze", action="store_true",
+                    help="serve live params instead of the deployment-frozen "
+                         "DeployPlan (A/B arm; logits are bit-identical)")
     ap.add_argument("--out", default="BENCH_vit.json")
     args = ap.parse_args()
+
+    if args.impl:
+        from repro.kernels import ops
+        ops.set_default_impl(args.impl)
 
     cfg = ViTConfig(image_size=args.image_size, n_layers=args.layers,
                     d_model=args.d_model, d_ff=2 * args.d_model)
 
     if args.sweep:
-        rec = policy_sweep(cfg, batch=args.batch, buckets=args.buckets)
+        rec = policy_sweep(cfg, batch=args.batch, buckets=args.buckets,
+                           freeze=not args.no_freeze, impl=args.impl)
         with open(args.out, "w") as f:
             json.dump(rec, f, indent=2)
         for name, r in rec["policies"].items():
@@ -67,10 +79,14 @@ def main():
     dense_params = dense_model.init(jax.random.PRNGKey(0))
     model, params = build_policy_model(cfg, args.policy, dense_model,
                                        dense_params)
-    engine = BucketedViTEngine(model, params, buckets=args.buckets).warmup()
+    engine = BucketedViTEngine(model, params, buckets=args.buckets,
+                               freeze=not args.no_freeze,
+                               impl=args.impl).warmup()
     traces = engine.trace_count
-    log.info("warmup: compiled %d bucket programs %s", traces,
-             list(engine.buckets))
+    log.info("warmup: compiled %d bucket programs %s (frozen=%s%s)", traces,
+             list(engine.buckets), engine.frozen,
+             f", {engine.plan.frozen_linears} shift weights decoded"
+             if engine.plan is not None else "")
 
     # Stream variable-size requests (sizes cycle over the bucket range).
     sizes = [(i % engine.buckets[-1]) + 1 for i in range(args.requests)]

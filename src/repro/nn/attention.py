@@ -202,6 +202,29 @@ class Attention:
         out = out.transpose(0, 2, 1, 3).reshape(b, n, self.h * self.dh)
         return self.o_proj(params["o"], out)
 
+    # -- inference -----------------------------------------------------------
+    def infer(self, params, x, positions=None):
+        """Serving forward. For the encoder binary-linear mode (the ViT path)
+        this routes through the fused bidirectional Hamming-attention op
+        (kernels.ops.binary_linear_attention_bidir): one pass accumulating
+        KV/ksum then emitting outputs, no STE machinery — impl-selected
+        (Pallas kernel on TPU, sign-trick XLA twin elsewhere). Every other
+        mode falls back to the train=False forward."""
+        if self.mode != "binary_linear" or self.causal:
+            return self(params, x, positions=positions, train=False)
+        from repro.kernels import ops
+
+        b, n, _ = x.shape
+        q, k, v, _ = self._qkv(params, x, positions)
+        g = self.h // self.hkv
+        kf = _repeat_kv(k, g)
+        vf = _repeat_kv(v, g)
+        out = ops.binary_linear_attention_bidir(
+            q.astype(jnp.float32), kf.astype(jnp.float32),
+            vf.astype(jnp.float32)).astype(x.dtype)
+        out = out.transpose(0, 2, 1, 3).reshape(b, n, self.h * self.dh)
+        return self.o_proj(params["o"], out)
+
     # -- decode --------------------------------------------------------------
     def init_cache(self, batch, max_len, dtype=jnp.bfloat16):
         if self.mode in ("linear", "binary_linear"):

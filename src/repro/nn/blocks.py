@@ -116,13 +116,21 @@ class TransformerBlock:
             return y
         return self.feed(params["feed"], x)
 
+    def _infer_mixer(self, params, h, positions):
+        if hasattr(self.mixer, "infer"):
+            return self.mixer.infer(params["mixer"], h, positions=positions)
+        return self.mixer(params["mixer"], h, positions=positions, train=False)
+
     def infer(self, params, x, positions=None):
         """Aux-free inference forward: same residual wiring as __call__ with
-        train=False, but MoE feeds take their deterministic dispatch path
-        (clean-logit argmax, no rng, no balance/drop bookkeeping). Returns x
-        only — the serving engines jit this."""
+        train=False, but mixers take their serving path (fused bidirectional
+        Hamming attention for encoder binary-linear mode) and MoE feeds their
+        deterministic gather dispatch (clean-logit argmax, no rng, no
+        balance/drop bookkeeping). Returns x only — the serving engines jit
+        this, typically closed over a core.deploy DeployPlan's frozen params
+        so no per-call weight decode survives in the compiled program."""
         h = self.norm1(params["norm1"], x)
-        mix = self.mixer(params["mixer"], h, positions=positions, train=False)
+        mix = self._infer_mixer(params, h, positions)
         if self.parallel:
             return x + mix + self._infer_feed(params, h)
         x = x + mix

@@ -94,6 +94,93 @@ def combine(expert_out_flat, aux, s, d):
     return jax.vmap(one)(expert_out_flat, aux["slot"], aux["tok"], aux["w"])
 
 
+# ---------------------------------------------------------------------------
+# Inference dispatch: gather-ordered segment buffer (ISSUE 3 tentpole, part 3)
+# ---------------------------------------------------------------------------
+#
+# The training dispatch above scatters tokens into a zeroed buffer
+# (`zeros().at[slot].set`) and the combine scatter-adds back — correct under
+# vmap/grad, but at serve time (top-1, no drop statistics) both scatters are
+# avoidable: the buffer can be built by a GATHER from the token array (rows
+# in expert-segment order), experts run on per-expert static views of it,
+# and each token's output is a gather from its expert's segment. No
+# scatter-into-zeros, no concatenate of expert outputs.
+
+def dispatch_infer(xg, expert_idx, gate, caps):
+    """Top-1 inference dispatch. xg: (G, S, d); expert_idx: (G, S) int;
+    gate: (G, S) combine weights; caps: python list of static capacities.
+
+    Returns (buf (G, total, d), info). Expert e owns rows
+    [offset_e, offset_e + cap_e) of buf; rows are filled by gathering the
+    tokens routed to e in token order (priority identical to `dispatch`),
+    zero beyond the expert's live count. info carries what `combine_infer`
+    needs: each token's within-expert rank (pos), its keep flag, its expert
+    and its gate.
+
+    All row movement is a single FLAT gather from the (G·S, d) token array —
+    a vmapped per-group gather lowers to a batched gather that CPU/older-TPU
+    XLA executes as a scalar loop, which is exactly the dispatch tax this
+    path exists to remove.
+    """
+    g, s, d = xg.shape
+    n_exp = len(caps)
+    offsets = [0]
+    for c in caps:
+        offsets.append(offsets[-1] + c)
+    total = offsets[-1]
+    caps_arr = jnp.asarray(caps, jnp.int32)
+    offs_arr = jnp.asarray(offsets[:-1], jnp.int32)
+    # Static row → expert map of the segment buffer.
+    row_e = jnp.asarray(
+        [e for e, c in enumerate(caps) for _ in range(c)], jnp.int32)
+
+    onehot = (expert_idx[..., None] == jnp.arange(n_exp)).astype(jnp.int32)
+    counts = jnp.sum(onehot, axis=1)                           # (G, E)
+    starts = jnp.cumsum(counts, axis=-1) - counts              # (G, E)
+    # Token-order rank of each token within its expert (same priority rule
+    # as the sort-based dispatch: earlier tokens win capacity ties).
+    pos = jnp.take_along_axis(jnp.cumsum(onehot, axis=1) - onehot,
+                              expert_idx[..., None], axis=2)[..., 0]  # (G,S)
+    keep = pos < caps_arr[expert_idx]
+    # Buffer row r of expert e, local slot l = r − offset_e, holds the l-th
+    # token routed to e: sorted-order index starts[e] + l.
+    order = jnp.argsort(expert_idx, axis=-1, stable=True)      # (G, S)
+    local = jnp.arange(total) - offs_arr[row_e]                # (total,)
+    src_sorted = jnp.clip(starts[:, row_e] + local[None], 0, s - 1)
+    src = jnp.take_along_axis(order, src_sorted, axis=-1)      # (G, total)
+    flat_src = (src + jnp.arange(g, dtype=src.dtype)[:, None] * s).reshape(-1)
+    buf = xg.reshape(g * s, d)[flat_src].reshape(g, total, d)
+    # Rows past an expert's live token count hold clipped duplicates of real
+    # tokens rather than zeros — deliberately unmasked: combine_infer reads
+    # only rows [starts_e, starts_e + min(count_e, cap_e)) back, so zeroing
+    # the dead rows would be a (G, total, d) elementwise op spent on values
+    # nothing consumes. (The training `dispatch` zero-fills because its
+    # scatter-add combine touches every buffer row.)
+    info = {"expert": expert_idx, "pos": pos, "keep": keep, "gate": gate,
+            "caps": tuple(caps)}
+    return buf, info
+
+
+def combine_infer(expert_outs, info):
+    """expert_outs: list of (G, cap_e, d) per-expert outputs in segment order
+    → (G, S, d). Pure gathers: each token reads row `pos` of its expert's
+    segment (top-1 ⇒ exactly one contribution), scaled by gate·keep. Flat
+    single-gather per expert, same rationale as dispatch_infer."""
+    expert, pos, keep, gate = (info["expert"], info["pos"], info["keep"],
+                               info["gate"])
+    g, s = expert.shape
+    y = None
+    for e, out_e in enumerate(expert_outs):
+        cap_e = out_e.shape[1]
+        sel = jnp.clip(pos, 0, cap_e - 1)
+        flat = (sel + jnp.arange(g, dtype=sel.dtype)[:, None] * cap_e).reshape(-1)
+        got = out_e.reshape(g * cap_e, -1)[flat].reshape(g, s, -1)
+        got = jnp.where((expert == e)[..., None], got, 0.0)
+        y = got if y is None else y + got
+    w = (gate * keep.astype(gate.dtype)).astype(y.dtype)
+    return y * w[..., None]
+
+
 def group_tokens(x, d_model, target_group=4096, min_groups=32):
     """(..., d) → (G, S, d) plus an ungroup closure."""
     lead = x.shape[:-1]

@@ -99,13 +99,25 @@ class ShiftAddViT:
         n = max(len(self.blocks), 1)
         return logits, {"balance_loss": bal / n, "drop_fraction": drop / n}
 
+    def prepare_inference(self, params, impl=None, token_counts=()):
+        """Deployment freeze (core.deploy): decode/pack every shift weight
+        once and warm MoE capacity plans. Returns a DeployPlan whose `params`
+        feed `infer` with exact logit parity — the serving engine closes its
+        jitted forward over them."""
+        from repro.core.deploy import prepare_inference
+        return prepare_inference(self, params, impl=impl,
+                                 token_counts=token_counts)
+
     def infer(self, params, images):
         """Inference fast path: images (B, H, W, C) → logits (B, n_classes).
 
         The serving forward (repro.serve.vision jits this): no aux-loss
-        computation, and MoE feeds route deterministically on clean-logit
-        argmax — no rng anywhere, so two calls on the same batch return
-        identical logits.
+        computation, binary-linear attention through the fused bidirectional
+        op, MoE feeds through the deterministic gather dispatch on
+        clean-logit argmax — no rng anywhere, so two calls on the same batch
+        return identical logits. Pass a DeployPlan's frozen params (see
+        `prepare_inference`) to also hoist every shift-weight decode out of
+        the compiled program; logits are bit-identical either way.
         """
         x = self.patch_embed(params["patch_embed"],
                              self.patchify(images).astype(self.mc.activation_dtype))

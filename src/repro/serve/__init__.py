@@ -1,4 +1,4 @@
 from repro.serve.decode import (generate, make_decode_loop, make_prefill,
                                 make_prefill_step, make_serve_step)
-from repro.serve.vision import (BucketedViTEngine, policy_sweep,
-                                vit_energy_per_image)
+from repro.serve.vision import (BucketedViTEngine, component_breakdown,
+                                policy_sweep, vit_energy_per_image)

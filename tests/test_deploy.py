@@ -1,0 +1,97 @@
+"""Deployment freeze (core.deploy): the one-time decode must be bit-exact
+against the per-forward fake-quant/decode it hoists, the tree walk must catch
+every shift subtree, and MoE capacity plans must be warmed for the buckets."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quant
+from repro.core.deploy import freeze_params, prepare_inference
+from repro.core.shift_linear import ShiftLinear
+
+
+def _latent_leaf(key, k=16, n=8):
+    w = jax.random.normal(key, (k, n)) * 0.1
+    return {"w_latent": w, "bias": jnp.zeros((n,))}
+
+
+def test_freeze_latent_decode_is_bit_exact():
+    """w_deploy must equal the po2 STE forward value exactly — the whole
+    frozen-vs-unfrozen exact-logit-parity guarantee rests on this."""
+    leaf = _latent_leaf(jax.random.PRNGKey(0))
+    frozen, count = freeze_params({"layer": leaf}, "xla")
+    assert count == 1
+    w_deploy = frozen["layer"]["w_deploy"]
+    w_ste = quant.po2_quantize_ste(leaf["w_latent"])
+    np.testing.assert_array_equal(np.asarray(w_deploy), np.asarray(w_ste))
+    np.testing.assert_array_equal(np.asarray(frozen["layer"]["bias"]),
+                                  np.asarray(leaf["bias"]))
+
+
+def test_freeze_packed_decode_is_bit_exact():
+    """Packed int8 → w_deploy must equal the per-forward exponent-bit decode
+    (ref.shift_matmul_ref's po2_weight_from_packed) it hoists."""
+    w = jax.random.normal(jax.random.PRNGKey(1), (32, 16)) * 0.05
+    leaf = {"w_packed": quant.pack_from_dense(w)}
+    frozen, count = freeze_params(leaf, "xla")
+    assert count == 1
+    np.testing.assert_array_equal(
+        np.asarray(frozen["w_deploy"]),
+        np.asarray(quant.po2_weight_from_packed(leaf["w_packed"], jnp.float32)))
+
+
+def test_freeze_for_pallas_packs_once():
+    """impl=pallas/interpret freezes to the int8 kernel format (the Pallas
+    kernel decodes in VMEM — nothing to hoist beyond the packing itself)."""
+    leaf = _latent_leaf(jax.random.PRNGKey(2))
+    frozen, _ = freeze_params(leaf, "pallas")
+    assert set(frozen) == {"w_packed", "bias"}
+    np.testing.assert_array_equal(
+        np.asarray(frozen["w_packed"]),
+        np.asarray(quant.pack_from_dense(leaf["w_latent"])))
+
+
+def test_frozen_shift_linear_forward_is_exact():
+    """ShiftLinear(w_deploy) forward == ShiftLinear(w_latent) forward,
+    bit-for-bit (same dot, same operand values)."""
+    lin = ShiftLinear(16, 8, mode="latent")
+    params = lin.init(jax.random.PRNGKey(3))
+    frozen, _ = freeze_params(params, "xla")
+    x = jax.random.normal(jax.random.PRNGKey(4), (5, 16))
+    np.testing.assert_array_equal(np.asarray(lin(params, x)),
+                                  np.asarray(lin(frozen, x)))
+
+
+def test_freeze_walk_counts_whole_model_tree():
+    """On a stage-2 shiftadd ViT the walk must freeze every shift subtree:
+    4 projections per layer + the Shift expert's up/down per MoE layer."""
+    import dataclasses
+    from repro.core.policy import DENSE
+    from repro.nn.vit import ShiftAddViT, ViTConfig
+    from repro.serve.vision import build_policy_model
+
+    cfg = ViTConfig(image_size=16, patch_size=4, n_layers=2, d_model=32,
+                    n_heads=2, d_ff=64)
+    dense_model = ShiftAddViT(dataclasses.replace(cfg, policy=DENSE))
+    dense_params = dense_model.init(jax.random.PRNGKey(0))
+    model, params = build_policy_model(cfg, "shiftadd", dense_model,
+                                       dense_params)
+    plan = prepare_inference(model, params, impl="xla", token_counts=(64,))
+    assert plan.frozen_linears == 2 * 4 + 2 * 2   # projections + shift expert
+    assert plan.moe_layers == 2
+    assert plan.token_counts == (64,)
+    assert plan.impl == "xla"
+    # Capacity plans were warmed on the live MoE modules.
+    for blk in model.blocks:
+        caps, offsets = blk.feed._capacity_plans[64]
+        assert sum(caps) >= 64 and offsets[0] == 0
+
+
+def test_freeze_dense_tree_is_identity():
+    """A dense-policy tree has nothing to freeze; structure passes through."""
+    tree = {"a": {"kernel": jnp.ones((4, 4)), "bias": jnp.zeros((4,))},
+            "b": [{"kernel": jnp.ones((2, 2))}]}
+    frozen, count = freeze_params(tree, "xla")
+    assert count == 0
+    np.testing.assert_array_equal(np.asarray(frozen["a"]["kernel"]),
+                                  np.asarray(tree["a"]["kernel"]))

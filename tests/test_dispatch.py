@@ -159,6 +159,80 @@ def test_bookkeeping_matches_numpy_oracle(g, s, e, k, cap, seed):
     _check_bookkeeping_oracle(g, s, e, k, cap, seed)
 
 
+# ---------------------------------------------------------------------------
+# Gather-ordered inference dispatch (ISSUE 3): parity with the scatter path
+# ---------------------------------------------------------------------------
+
+def _identity_expert_outs(buf, caps):
+    """Per-expert static views of the segment buffer (identity experts)."""
+    outs, off = [], 0
+    for c in caps:
+        outs.append(buf[:, off:off + c, :])
+        off += c
+    return outs
+
+
+def _check_infer_matches_scatter(g, s, e, caps, seed):
+    """combine_infer(dispatch_infer(x)) with identity experts must equal the
+    training scatter path bit-for-bit (same token-order priority, same
+    drops) — the gather rewrite may not change a single logit."""
+    from repro.nn.dispatch import combine_infer, dispatch_infer
+
+    d = 4
+    xg, idx, gate = _route(g, s, d, e, 1, seed)
+    buf_t, aux_t = dispatch(xg, idx, gate, caps, stats=False)
+    y_t = combine(buf_t, aux_t, s, d)
+    buf_i, info = dispatch_infer(xg, idx[..., 0], gate[..., 0], caps)
+    y_i = combine_infer(_identity_expert_outs(buf_i, caps), info)
+    np.testing.assert_array_equal(np.asarray(y_t), np.asarray(y_i))
+    # Live buffer rows must agree too (dead rows are deliberately unmasked
+    # in the gather path — nothing reads them back, so only live rows are
+    # comparable).
+    idx_np = np.asarray(idx[..., 0])
+    bt, bi = np.asarray(buf_t), np.asarray(buf_i)
+    off = 0
+    for ei, cap in enumerate(caps):
+        for gi in range(g):
+            live = min(int((idx_np[gi] == ei).sum()), cap)
+            np.testing.assert_array_equal(bt[gi, off:off + live],
+                                          bi[gi, off:off + live])
+        off += cap
+
+
+def test_infer_dispatch_matches_scatter_examples():
+    for seed, (g, s, e, caps) in enumerate([
+            (1, 8, 2, [4, 4]),          # balanced, possible drops
+            (2, 16, 2, [16, 16]),       # no drops possible
+            (1, 10, 3, [2, 3, 5]),      # heterogeneous capacities
+            (3, 12, 2, [1, 12]),        # starved expert 0
+    ]):
+        _check_infer_matches_scatter(g, s, e, caps, seed)
+
+
+def test_infer_dispatch_all_tokens_one_expert():
+    """Everyone routes to expert 0 and overflows its capacity: kept prefix in
+    token order, dropped tokens contribute exactly zero."""
+    from repro.nn.dispatch import combine_infer, dispatch_infer
+
+    g, s, d = 1, 10, 4
+    xg = jnp.arange(g * s * d, dtype=jnp.float32).reshape(g, s, d)
+    idx = jnp.zeros((g, s), jnp.int32)
+    gate = jnp.ones((g, s))
+    caps = [4, 3]
+    buf, info = dispatch_infer(xg, idx, gate, caps)
+    np.testing.assert_array_equal(np.asarray(buf[0, :4]), np.asarray(xg[0, :4]))
+    y = combine_infer(_identity_expert_outs(buf, caps), info)
+    np.testing.assert_array_equal(np.asarray(y[0, :4]), np.asarray(xg[0, :4]))
+    np.testing.assert_array_equal(np.asarray(y[0, 4:]), 0.0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 3), st.integers(4, 24), st.integers(2, 4),
+       st.integers(1, 8), st.integers(0, 10_000))
+def test_infer_dispatch_matches_scatter_property(g, s, e, cap, seed):
+    _check_infer_matches_scatter(g, s, e, [cap] * e, seed)
+
+
 def test_stats_false_skips_bookkeeping_but_combines_identically():
     """The inference dispatch path: same buffer and combine aux, no stats."""
     g, s, d, e, k = 2, 16, 8, 4, 1

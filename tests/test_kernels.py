@@ -119,6 +119,43 @@ def test_linattn_kernel_returns_final_carry(b, h, n, dk, dv):
             _close(state[key], state_ref[key], tol=1e-3)
 
 
+BIDIR_SHAPES = [
+    (1, 2, 64, 32, 32),      # aligned ViT bucket shape
+    (2, 2, 197, 64, 48),     # DeiT token count: odd N, odd Dv
+    (1, 3, 196, 80, 80),     # the benchmark's 56×56/4 geometry
+    (2, 1, 8, 16, 16),       # tiny: N below one sublane tile
+]
+
+
+@pytest.mark.parametrize("b,h,n,dk,dv", BIDIR_SHAPES)
+def test_bidir_binary_attention_kernel_sweep(b, h, n, dk, dv):
+    """Fused encoder kernel (interpret) and sign-trick XLA twin vs the
+    quadratic oracle with causal=False — the ViT serving attention."""
+    q = jax.random.normal(jax.random.PRNGKey(20), (b, h, n, dk))
+    k = jax.random.normal(jax.random.PRNGKey(21), (b, h, n, dk))
+    v = jax.random.normal(jax.random.PRNGKey(22), (b, h, n, dv))
+    out_ref = ref.binary_linear_attention_ref(q, k, v, causal=False)
+    _close(ops.binary_linear_attention_bidir(q, k, v, impl="interpret"),
+           out_ref, tol=1e-3)
+    _close(ops.binary_linear_attention_bidir(q, k, v, impl="xla"),
+           out_ref, tol=1e-3)
+
+
+def test_bidir_matches_core_bidirectional():
+    """The serving op must agree with the training-path `_bidirectional`
+    (STE einsums) — same Hamming kernel, different machinery."""
+    from repro.core.add_attention import binary_linear_attention
+
+    b, h, n, dk = 2, 2, 50, 24
+    q = jax.random.normal(jax.random.PRNGKey(23), (b, h, n, dk))
+    k = jax.random.normal(jax.random.PRNGKey(24), (b, h, n, dk))
+    v = jax.random.normal(jax.random.PRNGKey(25), (b, h, n, dk))
+    want = binary_linear_attention(q, k, v, causal=False, train=False)
+    for impl in ("xla", "interpret"):
+        _close(ops.binary_linear_attention_bidir(q, k, v, impl=impl), want,
+               tol=1e-4)
+
+
 PAD_SHAPES = [(197, 100, 60),      # DeiT token count: the shape that used to
               (197, 192, 197),     # trip the m % bm hard-assert
               (5, 7, 3), (130, 513, 129)]

@@ -89,6 +89,74 @@ def test_engine_bucket_selection_and_chunking():
     assert engine.batches_served == 3              # 8 + 8 + 3→bucket 4
 
 
+@pytest.mark.parametrize("policy", [DENSE, STAGE1, SHIFTADD])
+@pytest.mark.parametrize("image_size", [28, 32])
+def test_frozen_unfrozen_exact_logit_parity(policy, image_size):
+    """The acceptance criterion: inference on the DeployPlan's frozen params
+    must produce BIT-IDENTICAL logits to inference on the live params, for
+    all three policies, on both odd (28px → 49 tokens, DeiT-style
+    non-aligned) and aligned (32px → 64 tokens) shapes."""
+    cfg = ViTConfig(image_size=image_size, patch_size=4, n_layers=2,
+                    d_model=32, n_heads=2, d_ff=64, policy=policy)
+    model = ShiftAddViT(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    plan = model.prepare_inference(params, impl="xla")
+    imgs = _imgs(5, seed=11, size=image_size)
+    unfrozen = model.infer(params, imgs)
+    frozen = model.infer(plan.params, imgs)
+    np.testing.assert_array_equal(np.asarray(unfrozen), np.asarray(frozen))
+
+
+def test_frozen_unfrozen_engine_parity():
+    """Both engine arms (freeze on/off) must serve identical logits — the
+    freeze benchmark's A/B arms measure the same function."""
+    model, params, _ = _vit(SHIFTADD)
+    imgs = _imgs(6, seed=13)
+    e_frozen = BucketedViTEngine(model, params, buckets=(8,), freeze=True)
+    e_live = BucketedViTEngine(model, params, buckets=(8,), freeze=False)
+    np.testing.assert_array_equal(np.asarray(e_frozen.infer(imgs)),
+                                  np.asarray(e_live.infer(imgs)))
+    assert e_frozen.frozen and e_frozen.plan is not None
+    assert not e_live.frozen and e_live.plan is None
+    # Shiftadd stage 2: 4 projections + 2 shift-expert linears per layer.
+    assert e_frozen.plan.frozen_linears == 2 * (4 + 2)
+
+
+def test_frozen_engine_trace_count_stays_flat():
+    """Regression: the jitted forward closes over the plan as constants —
+    mixed warm-bucket traffic must never retrace (the closed-over params must
+    not become fresh tracers per call)."""
+    model, params, _ = _vit(SHIFTADD)
+    engine = BucketedViTEngine(model, params, buckets=(1, 4, 8),
+                               freeze=True).warmup()
+    assert engine.trace_count == 3
+    for i, n in enumerate((2, 8, 1, 5, 12)):
+        out = engine.infer(_imgs(n, seed=40 + i))
+        assert out.shape == (n, 10)
+    engine.infer(jnp.zeros((3, 16, 16, 3), jnp.uint8))
+    assert engine.trace_count == 3, "frozen engine retraced after warmup"
+
+
+def test_interpret_impl_frozen_close():
+    """The interpret (Pallas-body) frozen path serves logits close to the
+    xla frozen path — CI forces this arm with --impl interpret. (Not exact:
+    the packed kernel contracts in bf16 on the MXU dataflow.)"""
+    model, params, _ = _vit(SHIFTADD)
+    imgs = _imgs(4, seed=17)
+    want = model.infer(model.prepare_inference(params, impl="xla").params,
+                       imgs)
+    from repro.kernels import ops
+    prev = ops.default_impl()
+    ops.set_default_impl("interpret")
+    try:
+        got = model.infer(
+            model.prepare_inference(params, impl="interpret").params, imgs)
+    finally:
+        ops.set_default_impl(prev)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-2, atol=2e-2)
+
+
 def test_modeled_energy_ordering():
     """The analytic energy model must reproduce the paper's ordering on the
     default config: each reparameterization stage strictly cuts energy."""
