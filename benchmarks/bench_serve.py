@@ -103,7 +103,16 @@ def bench(prompt_len=512, batch=4, new_tokens=64, iters=3):
     }
 
 
-def main():
+def main(rows=None):
+    if rows is not None:
+        # benchmarks/run.py harness mode: small prompt, CSV row contract.
+        rec = bench(prompt_len=64, batch=2, new_tokens=8, iters=1)
+        rows.append(("serve_prefill", rec["prefill_s"] * 1e6,
+                     f"speedup_vs_warmup={rec['prefill_speedup']:.1f}"))
+        rows.append(("serve_decode", rec["decode_s"] * 1e6,
+                     f"toks_s={rec['decode_toks_per_s']:.0f}"))
+        return
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--prompt-len", type=int, default=512)
     ap.add_argument("--batch", type=int, default=4)

@@ -1,0 +1,95 @@
+"""Traffic-serving benchmark: one seeded arrival trace, every policy arm.
+Writes BENCH_traffic.json — the per-REQUEST twin of BENCH_vit.json's
+per-batch numbers, sharing its latency-summary schema (serve.metrics).
+
+    PYTHONPATH=src python benchmarks/bench_traffic.py [--requests 300]
+    PYTHONPATH=src python benchmarks/bench_traffic.py --scenario bursty
+
+The trace (arrival rate, deadline budgets) is calibrated from the DENSE
+arm's measured per-bucket service times at --utilization of its replica
+capacity, then replayed unchanged against each policy — so
+`shiftadd_vs_dense_p99` compares the same requests, same arrivals, same
+deadlines, and reflects purely how much faster the reparameterized engine
+drains the queue. CI gates (benchmarks/check_traffic.py): zero recompiles
+after warmup, zero deadline misses at the calibrated default load, and
+shiftadd p99 at or below dense p99.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.nn.vit import ViTConfig
+from repro.serve.frontend import traffic_sweep
+from repro.serve.traffic import SCENARIOS
+
+
+def run(scenario="poisson", requests=300, seed=0, replicas=2, arm="auto",
+        utilization=0.4, image_size=56, layers=4, d_model=128, impl=None,
+        verify_replay=True):
+    cfg = ViTConfig(image_size=image_size, n_layers=layers, d_model=d_model,
+                    d_ff=2 * d_model)
+    return traffic_sweep(
+        cfg, scenario=scenario, policies=("dense", "stage1", "shiftadd"),
+        n_requests=requests, seed=seed, replicas=replicas, arm=arm,
+        utilization=utilization, impl=impl, verify_replay=verify_replay)
+
+
+def main(rows=None):
+    if rows is not None:
+        # benchmarks/run.py harness mode: tiny geometry, CSV row contract.
+        rec = run(requests=40, image_size=16, layers=2, d_model=32,
+                  verify_replay=False)
+        for name, r in rec["policies"].items():
+            rows.append((f"traffic_{name}_p99", r["latency"]["p99_s"] * 1e6,
+                         f"goodput_img_s={r['goodput_images_per_s']:.1f}"))
+        return
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scenario", default="poisson", choices=SCENARIOS)
+    ap.add_argument("--requests", type=int, default=300)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--arm", default="auto",
+                    choices=["auto", "thread", "sharded"])
+    ap.add_argument("--utilization", type=float, default=0.4)
+    ap.add_argument("--image-size", type=int, default=56)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--impl", choices=["xla", "pallas", "interpret"],
+                    default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    if args.out is None:
+        args.out = os.path.join(os.path.dirname(__file__), "..",
+                                "BENCH_traffic.json")
+    if args.impl:
+        from repro.kernels import ops
+        ops.set_default_impl(args.impl)
+
+    rec = run(scenario=args.scenario, requests=args.requests, seed=args.seed,
+              replicas=args.replicas, arm=args.arm,
+              utilization=args.utilization, image_size=args.image_size,
+              layers=args.layers, d_model=args.d_model, impl=args.impl)
+    with open(args.out, "w") as f:
+        json.dump(rec, f, indent=2)
+    for name, r in rec["policies"].items():
+        lat = r["latency"]
+        print(f"{name:>9}: p50 {lat['p50_s'] * 1e3:7.1f} ms  "
+              f"p95 {lat['p95_s'] * 1e3:7.1f} ms  "
+              f"p99 {lat['p99_s'] * 1e3:7.1f} ms  "
+              f"goodput {r['goodput_images_per_s']:8.1f} img/s  "
+              f"miss {r['deadline_miss_rate']:.3f}  "
+              f"waste {r['padding_waste']:.3f}  "
+              f"recompiles {r['recompiles_after_warmup']}")
+    if "shiftadd_vs_dense_p99" in rec:
+        print(f"shiftadd vs dense p99: {rec['shiftadd_vs_dense_p99']:.3f}x")
+    print(f"wrote {os.path.abspath(args.out)}")
+
+
+if __name__ == "__main__":
+    main()

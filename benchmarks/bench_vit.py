@@ -36,7 +36,18 @@ from repro.nn.vit import ViTConfig
 from repro.serve.vision import policy_sweep
 
 
-def main():
+def main(rows=None):
+    if rows is not None:
+        # benchmarks/run.py harness mode: tiny geometry, CSV row contract.
+        from repro.nn.vit import ViTConfig as _Cfg
+        rec = policy_sweep(_Cfg(image_size=16, patch_size=4, n_layers=2,
+                                d_model=32, n_heads=2, d_ff=64),
+                           batch=8, iters=2, buckets=(8,))
+        for name, r in rec["policies"].items():
+            rows.append((f"vit_serve_{name}", r["latency_s_per_batch"] * 1e6,
+                         f"img_s={r['images_per_s']:.1f}"))
+        return
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--batch", type=int, default=32)
     ap.add_argument("--iters", type=int, default=10)
@@ -91,12 +102,16 @@ def main():
 
     dense = rec["policies"]["dense"]
     for name, r in rec["policies"].items():
+        lat = r["latency"]
         print(f"{name:>9}: {r['latency_s_per_batch'] * 1e3:8.2f} ms/batch  "
+              f"p50/p95/p99 {lat['p50_s'] * 1e3:.2f}/{lat['p95_s'] * 1e3:.2f}"
+              f"/{lat['p99_s'] * 1e3:.2f} ms  "
               f"{r['images_per_s']:9.1f} img/s  "
               f"{r['energy_pj_per_image'] / 1e6:8.3f} uJ/img  "
               f"({r['latency_vs_dense']:.2f}x dense latency, "
               f"{r['energy_pj_per_image'] / dense['energy_pj_per_image']:.2f}x "
-              f"dense energy, frozen={r['frozen']}, "
+              f"dense energy, frozen={r['frozen']}, buckets={r['buckets']}, "
+              f"waste={r['padding_waste']:.3f}, "
               f"recompiles={r['recompiles_after_warmup']})")
     if args.breakdown:
         # bench_breakdown.py row style: name, microseconds, notes. The

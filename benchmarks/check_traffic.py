@@ -1,0 +1,64 @@
+"""CI gate for the traffic-serving benchmark (vit-traffic job).
+
+    python benchmarks/check_traffic.py BENCH_traffic.json
+
+Fails (exit 1) if, on the calibrated default-load trace:
+- any policy arm recompiled a bucket program after warmup,
+- any policy arm missed a deadline or shed a request (the default load is
+  calibrated to be feasible — misses there are scheduler bugs, not
+  tightness; the virtual clock makes this machine-independent),
+- the shiftadd arm's per-request p99 exceeds the dense arm's on the same
+  trace (the serving-level restatement of the paper's latency crossover),
+- a replay-verification field is present and false (routing or logits
+  failed to reproduce bit-identically under the same seed).
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def main(argv):
+    if len(argv) != 2:
+        print(__doc__)
+        return 2
+    rec = json.load(open(argv[1]))
+    failures = []
+    for name, r in rec.get("policies", {}).items():
+        if r["recompiles_after_warmup"] > 0:
+            failures.append(f"{name}: recompiled after warmup "
+                            f"({r['recompiles_after_warmup']} extra traces)")
+        if r["deadline_miss_rate"] > 0:
+            failures.append(f"{name}: deadline-miss rate "
+                            f"{r['deadline_miss_rate']:.4f} > 0 at the "
+                            f"calibrated default load")
+        if r["shed_requests"] > 0:
+            failures.append(f"{name}: {r['shed_requests']} requests shed at "
+                            f"the calibrated default load")
+        for key in ("replay_identical_routing",
+                    "replay_bit_identical_logits"):
+            if key in r and not r[key]:
+                failures.append(f"{name}: {key} is false — the seeded trace "
+                                f"did not replay deterministically")
+        print(f"{name:>9}: p99 {r['latency']['p99_s'] * 1e3:.1f} ms  "
+              f"miss {r['deadline_miss_rate']:.3f}  "
+              f"recompiles {r['recompiles_after_warmup']}")
+    ratio = rec.get("shiftadd_vs_dense_p99")
+    if ratio is None:
+        failures.append("record has no shiftadd_vs_dense_p99 "
+                        "(dense or shiftadd arm missing)")
+    else:
+        print(f"shiftadd vs dense p99: {ratio:.3f}x")
+        if ratio > 1.0:
+            failures.append(f"shiftadd p99 above dense p99 on the same "
+                            f"trace ({ratio:.3f}x > 1.0)")
+    for f in failures:
+        print(f"FAIL: {f}")
+    if failures:
+        return 1
+    print("traffic gate OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

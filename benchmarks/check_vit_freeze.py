@@ -32,11 +32,26 @@ def main(argv):
     ab = json.load(open(argv[2]))
 
     failures = []
+    # The effective bucket set is read off the record, which the sweep read
+    # off the engine — the gate re-declares nothing. Every arm must have
+    # compiled exactly one program per effective bucket at warmup.
+    buckets = headline.get("buckets")
+    if not buckets:
+        failures.append(f"{argv[1]}: record carries no engine-surfaced "
+                        f"bucket set")
     for name, r in headline.get("policies", {}).items():
         if r["recompiles_after_warmup"] > 0:
             failures.append(
                 f"{argv[1]}: policy {name} recompiled after warmup "
                 f"({r['recompiles_after_warmup']} extra traces)")
+        if buckets and r.get("buckets") != buckets:
+            failures.append(
+                f"{argv[1]}: policy {name} served buckets {r.get('buckets')}"
+                f" != the record's engine-surfaced set {buckets}")
+        if buckets and r.get("compiles") != len(buckets):
+            failures.append(
+                f"{argv[1]}: policy {name} compiled {r.get('compiles')} "
+                f"programs for {len(buckets)} effective buckets {buckets}")
     if ab.get("recompiles_after_warmup", 1) > 0:
         failures.append(f"{argv[2]}: A/B engines recompiled after warmup")
 

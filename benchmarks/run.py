@@ -6,6 +6,9 @@ is produced separately from the dry-run artifacts by benchmarks/roofline.py.
   bench_kernels      — paper Fig. 4/5 + App. A (MatShift / MatAdd)
   bench_breakdown    — paper Tab. 4/6 (variant latency/energy breakdown)
   bench_energy       — paper Tab. 3 / Fig. 3 (45 nm analytic energy)
+  bench_vit          — serving policy sweep (BENCH_vit.json's small twin)
+  bench_serve        — LM prefill/decode serving path (BENCH_serve.json's)
+  bench_traffic      — traffic frontend p99/goodput (BENCH_traffic.json's)
   bench_sensitivity  — paper Tab. 2 (trains reduced ViTs; slowest)
   bench_llloss       — paper Tab. 7 (LL-loss ablation; trains routers)
 """
@@ -20,11 +23,12 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 def main() -> None:
     from benchmarks import (bench_breakdown, bench_energy, bench_kernels,
-                            bench_llloss, bench_sensitivity)
+                            bench_llloss, bench_sensitivity, bench_serve,
+                            bench_traffic, bench_vit)
 
     rows = []
-    for mod in (bench_kernels, bench_breakdown, bench_energy,
-                bench_sensitivity, bench_llloss):
+    for mod in (bench_kernels, bench_breakdown, bench_energy, bench_vit,
+                bench_serve, bench_traffic, bench_sensitivity, bench_llloss):
         t0 = time.time()
         mod.main(rows)
         rows.append((f"_{mod.__name__.split('.')[-1]}_wall",

@@ -219,6 +219,8 @@ def lower_cell(arch, shape_name, mesh_kind, policy=None, n_micro=None,
 
     mem = compiled.memory_analysis()
     xla_cost = compiled.cost_analysis() or {}
+    if isinstance(xla_cost, list):        # jax<=0.4.x: entry per computation
+        xla_cost = xla_cost[0] if xla_cost else {}
     hlo_cost = hlo_analysis.analyze(compiled.as_text())
 
     tokens = spec.global_batch * (spec.seq_len if spec.kind != "decode" else 1)

@@ -24,8 +24,9 @@ import jax
 
 from repro.nn.vit import ShiftAddViT, ViTConfig
 from repro.core.policy import DENSE
-from repro.serve.vision import (BucketedViTEngine, SWEEP_POLICIES,
-                                build_policy_model, policy_sweep)
+from repro.serve.vision import (DEFAULT_BUCKETS, BucketedViTEngine,
+                                SWEEP_POLICIES, build_policy_model,
+                                policy_sweep)
 from repro.utils.logging import get_logger
 
 log = get_logger("repro.launch.serve_vit")
@@ -38,7 +39,10 @@ def main():
     ap.add_argument("--sweep", action="store_true",
                     help="benchmark all policies and write BENCH_vit.json")
     ap.add_argument("--batch", type=int, default=32)
-    ap.add_argument("--buckets", type=int, nargs="+", default=[1, 8, 32])
+    ap.add_argument("--buckets", type=int, nargs="+", default=None,
+                    help="override the bucket set (default: the engine's "
+                         "DEFAULT_BUCKETS; the effective set is read back "
+                         "off the engine and logged)")
     ap.add_argument("--requests", type=int, default=64,
                     help="number of variable-size requests to stream")
     ap.add_argument("--image-size", type=int, default=32)
@@ -79,7 +83,8 @@ def main():
     dense_params = dense_model.init(jax.random.PRNGKey(0))
     model, params = build_policy_model(cfg, args.policy, dense_model,
                                        dense_params)
-    engine = BucketedViTEngine(model, params, buckets=args.buckets,
+    engine = BucketedViTEngine(model, params,
+                               buckets=args.buckets or DEFAULT_BUCKETS,
                                freeze=not args.no_freeze,
                                impl=args.impl).warmup()
     traces = engine.trace_count

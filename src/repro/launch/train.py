@@ -57,8 +57,7 @@ def main():
     if args.mesh:
         shape = tuple(int(x) for x in args.mesh.split("x"))
         axes = ("data", "model")[: len(shape)]
-        mesh = jax.make_mesh(shape, axes,
-                             axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+        mesh = shard_lib.make_mesh(shape, axes)
         shard_lib.set_active_mesh(mesh)
 
     model = LanguageModel(cfg)

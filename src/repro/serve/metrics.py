@@ -1,0 +1,40 @@
+"""Shared latency-metrics schema for the serving benchmarks.
+
+BENCH_vit.json (per-batch sweep latencies) and BENCH_traffic.json
+(per-request latencies under a simulated arrival process) report the same
+summary keys, produced here, so dashboards and CI gates read one schema:
+
+    {"p50_s": ..., "p95_s": ..., "p99_s": ..., "mean_s": ..., "max_s": ...,
+     "n": ...}
+
+Percentiles use sorted linear interpolation (numpy's default), which is
+well-defined down to a single sample — a one-element list reports that
+element for every percentile rather than NaN.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+PERCENTILES = (50, 95, 99)
+
+
+def latency_summary(samples_s) -> dict:
+    """Summary stats of a list of latencies (seconds) under the shared
+    BENCH_* schema. Empty input returns zeros with n=0 (a shed-everything
+    run must still serialize)."""
+    xs = np.asarray(list(samples_s), dtype=np.float64)
+    if xs.size == 0:
+        out = {f"p{p}_s": 0.0 for p in PERCENTILES}
+        out.update(mean_s=0.0, max_s=0.0, n=0)
+        return out
+    out = {f"p{p}_s": float(np.percentile(xs, p)) for p in PERCENTILES}
+    out.update(mean_s=float(xs.mean()), max_s=float(xs.max()), n=int(xs.size))
+    return out
+
+
+def padding_waste(real_images: int, padded_images: int) -> float:
+    """Fraction of served batch slots that were padding: 1 - real/padded.
+    0 when nothing was served (no slots, no waste)."""
+    if padded_images <= 0:
+        return 0.0
+    return 1.0 - real_images / padded_images

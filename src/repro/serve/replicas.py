@@ -1,0 +1,130 @@
+"""Engine replicas for the traffic frontend: thread-pool and data-parallel.
+
+The scheduler sees `n_slots` identical logical servers; how a slot maps to
+hardware is this module's concern:
+
+- **ThreadPoolReplicas** (the CPU arm): R slots served by a
+  `ThreadPoolExecutor`. By default all slots share ONE
+  `BucketedViTEngine` — a jitted executable is stateless and thread-safe,
+  so sharing keeps warmup at one compile per bucket no matter how many
+  replicas, and makes 1-vs-N logit parity structural (same program, same
+  batches). `share_engine=False` builds one engine per slot (full isolation,
+  R× the warmup compiles — the shape a future multi-process pool takes).
+
+- **DataParallelReplicas** (the multi-device arm): ONE slot whose engine
+  shards every batch row-wise across a `("data",)` device mesh via
+  `distributed.sharding.batch_sharding` — the repo's `batch → data` logical
+  rule, reused by the vision path. Parallelism here accelerates each batch
+  (the calibrated service model picks the speedup up automatically) instead
+  of multiplying concurrent batches. Buckets are rounded up to multiples of
+  the device count by the engine; read the effective set off
+  `pool.buckets`.
+
+`make_replicas(..., arm="auto")` picks data-parallel when the backend has
+enough devices, else the thread pool — so the same frontend code serves a
+laptop CPU and a multi-device accelerator host.
+
+All submissions return `concurrent.futures.Future`s; the frontend's virtual
+clock never blocks on one until its completion event fires, so thread-pool
+replicas genuinely overlap engine execution.
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import time
+
+import jax
+
+from repro.serve.vision import DEFAULT_BUCKETS, BucketedViTEngine
+
+
+class _ReplicaBase:
+    engines: list
+    n_slots: int
+
+    @property
+    def buckets(self):
+        return self.engines[0].buckets
+
+    @property
+    def trace_count(self) -> int:
+        return sum(e.trace_count for e in self.engines)
+
+    def warmup(self):
+        for e in self.engines:
+            e.warmup()
+        return self
+
+    def close(self):
+        pass
+
+
+class ThreadPoolReplicas(_ReplicaBase):
+    arm = "thread"
+
+    def __init__(self, model, params, n_replicas=2, buckets=DEFAULT_BUCKETS,
+                 freeze=True, impl=None, share_engine=True):
+        assert n_replicas >= 1
+        n_engines = 1 if share_engine else n_replicas
+        self.engines = [BucketedViTEngine(model, params, buckets=buckets,
+                                          freeze=freeze, impl=impl)
+                        for _ in range(n_engines)]
+        self.n_slots = n_replicas
+        self._pool = concurrent.futures.ThreadPoolExecutor(
+            max_workers=n_replicas, thread_name_prefix="vit-replica")
+
+    def _engine_for(self, slot: int) -> BucketedViTEngine:
+        return self.engines[slot % len(self.engines)]
+
+    def submit(self, slot: int, images) -> concurrent.futures.Future:
+        """Future resolving to (logits, measured wall seconds)."""
+        engine = self._engine_for(slot)
+
+        def run():
+            t0 = time.perf_counter()
+            logits = jax.block_until_ready(engine.infer(images))
+            return logits, time.perf_counter() - t0
+
+        return self._pool.submit(run)
+
+    def close(self):
+        self._pool.shutdown(wait=True)
+
+
+class DataParallelReplicas(_ReplicaBase):
+    arm = "sharded"
+
+    def __init__(self, model, params, n_replicas=2, buckets=DEFAULT_BUCKETS,
+                 freeze=True, impl=None, devices=None):
+        devices = list(devices if devices is not None else jax.devices())
+        if len(devices) < n_replicas:
+            raise ValueError(
+                f"data-parallel arm needs {n_replicas} devices, backend has "
+                f"{len(devices)} — use the thread arm (or arm='auto')")
+        from repro.distributed.sharding import make_mesh
+        mesh = make_mesh((n_replicas,), ("data",),
+                         devices=devices[:n_replicas])
+        self.mesh = mesh
+        self.engines = [BucketedViTEngine(model, params, buckets=buckets,
+                                          freeze=freeze, impl=impl,
+                                          mesh=mesh)]
+        self.n_slots = 1        # one logical server, n× per-batch speed
+
+    def submit(self, slot: int, images) -> concurrent.futures.Future:
+        """Future resolving to (logits, measured wall seconds); the sharded
+        arm executes synchronously (one device set, one program at a time)."""
+        fut = concurrent.futures.Future()
+        t0 = time.perf_counter()
+        logits = jax.block_until_ready(self.engines[0].infer(images))
+        fut.set_result((logits, time.perf_counter() - t0))
+        return fut
+
+
+def make_replicas(model, params, n_replicas=2, arm="auto", **kw):
+    """arm: 'thread' | 'sharded' | 'auto' (sharded when the backend has
+    ≥ n_replicas devices and n_replicas > 1, else thread)."""
+    if arm == "auto":
+        arm = ("sharded" if n_replicas > 1
+               and len(jax.devices()) >= n_replicas else "thread")
+    cls = {"thread": ThreadPoolReplicas, "sharded": DataParallelReplicas}[arm]
+    return cls(model, params, n_replicas=n_replicas, **kw)

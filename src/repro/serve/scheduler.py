@@ -1,0 +1,205 @@
+"""SLO-aware micro-batch scheduler for the bucketed ShiftAddViT engine.
+
+Pure decision logic, deterministic by construction: no wall clock, no
+randomness — every method takes the current (virtual) time as an argument,
+so the same trace always produces the same dispatch sequence. The frontend
+(`serve.frontend`) owns the clock and the engines; this module only decides
+*what* to batch and *when*.
+
+**Fill-or-deadline policy.** A batch is dispatched when
+
+- the queue can fill the largest engine bucket (amortization is maximal —
+  waiting longer cannot improve the images-per-program ratio), OR
+- the oldest queued request's *slack* (time to deadline minus the max-bucket
+  service estimate) hits the safety threshold `slack_s` — dispatch now,
+  padded to the smallest covering bucket, or the deadline is lost, OR
+- the oldest queued request has lingered `linger_s` — the padding-tradeoff
+  threshold: once the wait exceeds the marginal service cost of a bigger
+  bucket, waiting for more fill costs more latency than padding wastes
+  compute. `linger_s` defaults to the measured max-bucket service time, so
+  a faster policy (shiftadd vs dense) lingers proportionally less and its
+  per-request latency scales with its service speed.
+
+**Ordering.** One FIFO queue per deadline class; batch slots are filled by
+earliest-absolute-deadline among the class *heads* (ties: class declaration
+order). Within a class, requests therefore dispatch strictly in arrival
+order — the FIFO-within-deadline-class invariant the tests pin.
+
+**Admission control.** `offer` sheds an entire request (never a partial)
+when accepting it would push the queue past `max_queue_images` — bounded
+queues under overload instead of unbounded latency collapse.
+
+**Oversize requests.** Requests larger than the biggest bucket are split at
+admission into max-bucket parts that dispatch independently (the frontend
+reassembles logits in part order), mirroring `BucketedViTEngine.infer`'s own
+chunking, so a lone oversize request produces bit-identical logits through
+the scheduler and through a direct engine call.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import math
+
+from repro.serve.traffic import DEADLINE_CLASSES, Request
+
+
+@dataclasses.dataclass(frozen=True)
+class Part:
+    """One schedulable unit: a request, or a max-bucket slice of one."""
+    req: Request
+    part_idx: int
+    n_parts: int
+    offset: int          # first image of this part within the request
+    size: int            # images in this part
+    enqueued_s: float
+
+    @property
+    def rid(self):
+        return self.req.rid
+
+
+@dataclasses.dataclass(frozen=True)
+class Batch:
+    parts: tuple            # Parts in dispatch order
+    n_images: int
+    bucket: int
+    formed_s: float
+    reason: str             # "fill" | "deadline" | "linger" | "drain"
+
+    @property
+    def padding(self) -> int:
+        return self.bucket - self.n_images
+
+
+class MicroBatchScheduler:
+    """Queue + fill-or-deadline batch former over a fixed bucket set.
+
+    buckets: ascending engine bucket sizes (read them off the engine —
+    `BucketedViTEngine.buckets` is the effective, normalized set).
+    service_model_s: bucket → calibrated service seconds (used only for
+    slack estimates; the frontend uses it to advance the virtual clock).
+    slack_s: deadline safety threshold. linger_s: padding-tradeoff wait cap.
+    max_queue_images: admission bound (None = unbounded).
+    """
+
+    def __init__(self, buckets, service_model_s, *, slack_s=None,
+                 linger_s=None, max_queue_images=None):
+        self.buckets = tuple(sorted(set(int(b) for b in buckets)))
+        assert self.buckets and self.buckets[0] >= 1
+        self.service_model_s = dict(service_model_s)
+        svc_max = self.service_model_s[self.buckets[-1]]
+        # Defaults: linger one max-bucket service time; keep half of one as
+        # deadline safety margin (partial batch must still be served).
+        self.linger_s = svc_max if linger_s is None else float(linger_s)
+        self.slack_s = 0.5 * svc_max if slack_s is None else float(slack_s)
+        self.max_queue_images = max_queue_images
+        self._queues = {k: collections.deque() for k in DEADLINE_CLASSES}
+        self.queued_images = 0
+        self.shed_requests = 0
+        self.shed_images = 0
+        self.admitted_requests = 0
+
+    # -- admission ----------------------------------------------------------
+
+    def offer(self, req: Request, now: float) -> bool:
+        """Admit (splitting oversize requests) or shed. Returns admitted."""
+        if (self.max_queue_images is not None
+                and self.queued_images + req.size > self.max_queue_images):
+            self.shed_requests += 1
+            self.shed_images += req.size
+            return False
+        bmax = self.buckets[-1]
+        n_parts = max(1, math.ceil(req.size / bmax))
+        off = 0
+        for i in range(n_parts):
+            size = min(bmax, req.size - off)
+            self._queues[req.klass].append(Part(
+                req=req, part_idx=i, n_parts=n_parts, offset=off, size=size,
+                enqueued_s=now))
+            off += size
+        self.queued_images += req.size
+        self.admitted_requests += 1
+        return True
+
+    def has_queued(self) -> bool:
+        return self.queued_images > 0
+
+    # -- dispatch decision --------------------------------------------------
+
+    def _forced_at(self, part: Part) -> float:
+        """Earliest virtual time at which this part forces a dispatch."""
+        svc_max = self.service_model_s[self.buckets[-1]]
+        by_deadline = part.req.deadline_s - svc_max - self.slack_s
+        by_linger = part.enqueued_s + self.linger_s
+        return min(by_deadline, by_linger)
+
+    def _forced_reason(self, part: Part, now: float) -> str:
+        svc_max = self.service_model_s[self.buckets[-1]]
+        if part.req.deadline_s - svc_max - self.slack_s <= now:
+            return "deadline"
+        return "linger"
+
+    def next_forced_dispatch_s(self):
+        """min forced-dispatch time over the queue (None if empty or if the
+        thresholds are infinite — then only fill/drain dispatches)."""
+        times = [self._forced_at(q[0]) for q in self._queues.values() if q]
+        t = min(times) if times else None
+        return t if t is not None and math.isfinite(t) else None
+
+    def bucket_for(self, n: int) -> int:
+        for b in self.buckets:
+            if n <= b:
+                return b
+        return self.buckets[-1]
+
+    def _head_order(self):
+        """Class heads by (deadline, class order) — the fill order."""
+        heads = [(q[0].req.deadline_s, i, k)
+                 for i, k in enumerate(DEADLINE_CLASSES)
+                 if (q := self._queues[k])]
+        return [k for _, _, k in sorted(heads)]
+
+    def form_batch(self, now: float, drain: bool = False):
+        """Return the next Batch to dispatch at `now`, or None to wait.
+
+        drain=True (frontend end-of-trace) dispatches whatever is queued
+        without waiting for fill/linger/deadline triggers.
+        """
+        if self.queued_images == 0:
+            return None
+        bmax = self.buckets[-1]
+        forced = self.next_forced_dispatch_s()
+        if not drain and self.queued_images < bmax and (
+                forced is None or forced > now):
+            return None
+        # Reason: full bucket beats forced triggers in the log (it would
+        # have dispatched regardless of deadlines).
+        if self.queued_images >= bmax:
+            reason = "fill"
+        elif forced is not None and forced <= now:
+            heads = [q[0] for q in self._queues.values() if q]
+            part = min(heads, key=self._forced_at)
+            reason = self._forced_reason(part, now)
+        else:
+            reason = "drain"
+        parts, total = [], 0
+        while total < bmax:
+            order = self._head_order()
+            took = False
+            for k in order:
+                head = self._queues[k][0]
+                if total + head.size <= bmax:
+                    parts.append(self._queues[k].popleft())
+                    total += head.size
+                    took = True
+                    break
+            # No class head fits the remaining space: ship what we have
+            # (head-of-line order is preserved; we never reorder past a
+            # head to backfill padding).
+            if not took:
+                break
+        self.queued_images -= total
+        return Batch(parts=tuple(parts), n_images=total,
+                     bucket=self.bucket_for(total), formed_s=now,
+                     reason=reason)

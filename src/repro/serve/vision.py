@@ -10,7 +10,8 @@ end-to-end, not per-layer):
 
 - **Shape-bucketed batch assembly** (`BucketedViTEngine`): a stream of
   variable-size requests is padded into a small closed set of batch sizes
-  (default {1, 8, 32, 128}), so jit compiles exactly one program per bucket
+  (default {1, 8, 32} — the benchmark/CI set, surfaced as `engine.buckets`),
+  so jit compiles exactly one program per bucket
   and steady-state traffic never retraces. `trace_count` exposes the compile
   counter the no-recompilation test asserts on. The padded image buffer is
   engine-owned scratch and is donated to the jit'd forward on accelerators.
@@ -38,6 +39,7 @@ deterministic: identical batch in, identical logits out.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 
 import jax
@@ -46,8 +48,13 @@ import jax.numpy as jnp
 from repro.core import energy
 from repro.core.policy import DENSE, SHIFTADD, STAGE1
 from repro.nn.vit import ShiftAddViT, ViTConfig
+from repro.serve.metrics import latency_summary
 
-DEFAULT_BUCKETS = (1, 8, 32, 128)
+# The default bucket set IS the benchmark/CI set: bench_vit.py,
+# check_vit_freeze.py and the traffic frontend all read the effective set
+# off `engine.buckets` instead of re-declaring it (the old default carried
+# an extra 128 bucket no serving path compiled — records and gates drifted).
+DEFAULT_BUCKETS = (1, 8, 32)
 
 
 class BucketedViTEngine:
@@ -63,17 +70,33 @@ class BucketedViTEngine:
     (the A/B arm of the freeze benchmark); logits are bit-identical.
     impl: kernel implementation the plan decodes for (default: process-wide
     `kernels.ops.default_impl()`).
+    mesh: optional jax Mesh for the data-parallel serving arm. Batches are
+    placed with `distributed.sharding.batch_sharding` (the `batch → data`
+    logical rule), and each bucket is rounded UP to a multiple of the
+    mesh's batch-axis size so every device holds an equal shard.
+
+    The *effective* bucket set (sorted, deduplicated, mesh-rounded) is
+    surfaced as `engine.buckets`; benchmark records and CI gates read it
+    from here rather than re-declaring their own set.
     """
 
     def __init__(self, model: ShiftAddViT, params, buckets=DEFAULT_BUCKETS,
-                 freeze=True, impl=None):
+                 freeze=True, impl=None, mesh=None):
         from repro.kernels import ops
         from repro.nn.dispatch import choose_groups
 
         assert len(buckets) > 0 and min(buckets) >= 1
         self.model = model
         self.params = params
-        self.buckets = tuple(sorted(set(int(b) for b in buckets)))
+        self.mesh = mesh
+        dp = 1
+        if mesh is not None:
+            from repro.distributed.sharding import LOGICAL_AXIS_RULES
+            for ax in LOGICAL_AXIS_RULES["batch"]:
+                dp *= mesh.shape.get(ax, 1)
+        self._dp = dp
+        self.buckets = tuple(sorted(set(
+            dp * ((int(b) + dp - 1) // dp) for b in buckets)))
         self.frozen = bool(freeze)
         if impl is not None and impl != ops.default_impl():
             # The plan's weight format must match the kernels the jitted
@@ -88,10 +111,22 @@ class BucketedViTEngine:
         self.trace_count = 0        # incremented only when jit (re)traces
         self.batches_served = 0
         self.images_served = 0
+        self.padded_images_served = 0   # bucket slots incl. padding
+        # Thread-pool replicas share one engine across workers; unguarded
+        # '+=' on the counters would drop updates under concurrent infer().
+        self._counter_lock = threading.Lock()
 
         # The padded buffer is engine-owned scratch — donate it where the
         # backend supports donation (CPU donation only warns, so gate it).
         self._donates = jax.default_backend() in ("tpu", "gpu")
+        jit_kw = {}
+        if mesh is not None:
+            from repro.distributed import sharding as shd
+            # Data-parallel arm: rows over the mesh's batch axes, logits
+            # back the same way — the distributed/sharding.py batch → data
+            # rule, reused verbatim by the vision serving path.
+            jit_kw = dict(in_shardings=shd.batch_sharding(mesh, rank=4),
+                          out_shardings=shd.batch_sharding(mesh, rank=2))
         if freeze:
             # Per-group token counts the MoE dispatch will see, one per bucket.
             counts = set()
@@ -108,7 +143,8 @@ class BucketedViTEngine:
                 self.trace_count += 1   # runs at trace time, not at execution
                 return model.infer(run_params, images)
 
-            fwd_j = jax.jit(fwd, donate_argnums=(0,) if self._donates else ())
+            fwd_j = jax.jit(fwd, donate_argnums=(0,) if self._donates else (),
+                            **jit_kw)
             self._call = fwd_j
         else:
             self.plan = None
@@ -122,7 +158,12 @@ class BucketedViTEngine:
                 self.trace_count += 1
                 return model.infer(p, images)
 
-            fwd_j = jax.jit(fwd, donate_argnums=(1,) if self._donates else ())
+            if jit_kw:
+                from repro.distributed import sharding as shd
+                jit_kw["in_shardings"] = (shd.replicated(mesh),
+                                          jit_kw["in_shardings"])
+            fwd_j = jax.jit(fwd, donate_argnums=(1,) if self._donates else (),
+                            **jit_kw)
             self._call = lambda images: fwd_j(self.params, images)
 
     def bucket_for(self, n: int) -> int:
@@ -170,10 +211,19 @@ class BucketedViTEngine:
                 chunk = jnp.copy(chunk)
             logits = self._call(chunk)
             outs.append(logits[:take])
-            self.batches_served += 1
+            with self._counter_lock:
+                self.batches_served += 1
+                self.padded_images_served += bucket
             start += take
-        self.images_served += n
+        with self._counter_lock:
+            self.images_served += n
         return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
+
+    @property
+    def padding_waste(self) -> float:
+        """Lifetime fraction of served bucket slots that were padding."""
+        from repro.serve.metrics import padding_waste as _waste
+        return _waste(self.images_served, self.padded_images_served)
 
 
 # ---------------------------------------------------------------------------
@@ -387,7 +437,7 @@ def policy_sweep(base_cfg: ViTConfig = None, batch=32, iters=10,
     shiftadd-vs-dense latency ratio so the crossover is tracked across PRs.
     """
     base_cfg = base_cfg or ViTConfig()
-    buckets = tuple(buckets) if buckets else (1, 8, batch)
+    buckets = tuple(buckets) if buckets else DEFAULT_BUCKETS
     if batch not in buckets:
         buckets = tuple(sorted(set(buckets) | {batch}))
     dense_model = ShiftAddViT(dataclasses.replace(base_cfg, policy=DENSE))
@@ -403,7 +453,6 @@ def policy_sweep(base_cfg: ViTConfig = None, batch=32, iters=10,
                   f"{base_cfg.n_patches}p)"),
         "image_size": base_cfg.image_size,
         "batch": batch,
-        "buckets": list(buckets),
         "iters": iters,
         "frozen": bool(freeze),
         "impl": impl or ops.default_impl(),
@@ -414,6 +463,10 @@ def policy_sweep(base_cfg: ViTConfig = None, batch=32, iters=10,
                                            dense_params)
         engine = BucketedViTEngine(model, params, buckets=buckets,
                                    freeze=freeze, impl=impl).warmup()
+        # The effective bucket set comes off the engine — records and the
+        # CI gate must never re-declare it (the old drift: DEFAULT_BUCKETS
+        # advertised a 128 bucket the benchmark path never compiled).
+        record.setdefault("buckets", list(engine.buckets))
         traces_after_warmup = engine.trace_count
         jax.block_until_ready(engine.infer(imgs))   # bucket already compiled
         times = []
@@ -428,6 +481,11 @@ def policy_sweep(base_cfg: ViTConfig = None, batch=32, iters=10,
         record["policies"][name] = {
             "latency_s_per_batch": latency_s,
             "images_per_s": batch / latency_s,
+            # Same summary schema as BENCH_traffic.json (serve.metrics):
+            # here the samples are per-batch sweep latencies.
+            "latency": latency_summary(times),
+            "buckets": list(engine.buckets),
+            "padding_waste": engine.padding_waste,
             "energy_pj_per_image": e["total_pj"],
             "energy_compute_pj": e["compute_pj"],
             "energy_dram_pj": e["dram_pj"],

@@ -9,6 +9,7 @@ import jax
 import numpy as np
 import pytest
 
+from repro.distributed import sharding as sl
 from repro.distributed.sharding import LOGICAL_AXIS_RULES, logical_to_pspec
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
@@ -31,7 +32,7 @@ def test_logical_rules_cover_required_axes():
 
 def test_pspec_divisibility_fallback():
     # AbstractMesh carries shape/axis_names without requiring real devices.
-    mesh = jax.sharding.AbstractMesh((2, 4), ("data", "model"))
+    mesh = sl.make_abstract_mesh((2, 4), ("data", "model"))
     # indivisible dims fall back to replication
     spec = logical_to_pspec(("batch", "vocab"), mesh, (3, 5))
     assert all(s is None for s in spec) or len(spec) == 0
@@ -56,8 +57,7 @@ def test_sharded_train_step_runs_on_mesh():
         from repro.distributed import sharding as sl
         from repro.launch.dryrun import state_shardings, batch_shardings
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = sl.make_mesh((2, 4), ("data", "model"))
         sl.set_active_mesh(mesh)
         cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=64,
                           n_heads=4, n_kv_heads=4, d_ff=128, vocab_size=64,
@@ -89,10 +89,10 @@ def test_compressed_psum_matches_plain_psum():
     out = _run_subprocess("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro.distributed import sharding as sl
         from repro.distributed.collectives import compressed_psum
 
-        mesh = jax.make_mesh((8,), ("pod",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = sl.make_mesh((8,), ("pod",))
 
         def f(x):
             reduced, residual = compressed_psum(x, "pod")
@@ -100,8 +100,8 @@ def test_compressed_psum_matches_plain_psum():
             return reduced, exact, residual
 
         x = jax.random.normal(jax.random.PRNGKey(0), (8, 64))
-        r, e, res = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("pod"),
-                                          out_specs=P("pod")))(x)
+        r, e, res = jax.jit(sl.shard_map(f, mesh=mesh, in_specs=P("pod"),
+                                         out_specs=P("pod")))(x)
         rel = float(jnp.max(jnp.abs(r - e)) / (jnp.max(jnp.abs(e)) + 1e-9))
         # int8 quantization: ~1% relative error on the reduction
         assert rel < 0.05, rel
@@ -120,8 +120,7 @@ def test_moe_dispatch_shards_over_groups():
         from repro.nn.moe import TokenChoiceMoE
         from repro.distributed import sharding as sl
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = sl.make_mesh((2, 4), ("data", "model"))
         sl.set_active_mesh(mesh)
         cfg = ModelConfig(name="t", family="moe", n_layers=1, d_model=64,
                           n_heads=4, n_kv_heads=4, d_ff=64, vocab_size=64,

@@ -9,6 +9,7 @@ import pytest
 from repro.checkpoint import Checkpointer
 from repro.configs.base import ModelConfig, TrainConfig
 from repro.data.pipeline import SyntheticLMData
+from repro.distributed import sharding as sl
 from repro.distributed.fault_tolerance import (
     FailureInjector,
     SimulatedFailure,
@@ -110,8 +111,7 @@ def test_elastic_restore_across_device_counts(tmp_path):
     # restore with explicit (single-device) shardings
     from jax.sharding import NamedSharding, PartitionSpec as P
 
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = sl.make_mesh((1,), ("data",))
     shardings = jax.tree_util.tree_map(
         lambda _: NamedSharding(mesh, P()), state)
     step, restored = ckpt.restore_latest(state, shardings)

@@ -11,7 +11,10 @@ from repro.launch import hlo_analysis as H
 
 def _flops(fn, *args):
     comp = jax.jit(fn).lower(*args).compile()
-    return H.analyze(comp.as_text()), comp.cost_analysis()
+    cost = comp.cost_analysis()
+    if isinstance(cost, list):        # jax<=0.4.x: one entry per computation
+        cost = cost[0]
+    return H.analyze(comp.as_text()), cost
 
 
 def test_scan_flops_match_unrolled():
@@ -64,9 +67,9 @@ def test_collective_bytes_parsed(tmp_path):
     code = textwrap.dedent("""
         import jax, jax.numpy as jnp
         from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.distributed import sharding as sl
         from repro.launch import hlo_analysis as H
-        mesh = jax.make_mesh((4,), ("model",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = sl.make_mesh((4,), ("model",))
         def f(x, w):
             return x @ w                       # contraction over sharded dim
         x = jax.ShapeDtypeStruct((8, 64), jnp.float32)

@@ -1,0 +1,234 @@
+"""Traffic generator + micro-batch scheduler invariants (pure logic — no
+model in the loop; engine-in-the-loop coverage is tests/test_traffic_serve.py).
+"""
+import numpy as np
+import pytest
+
+from repro.serve.metrics import latency_summary, padding_waste
+from repro.serve.scheduler import MicroBatchScheduler
+from repro.serve.traffic import (DEADLINE_CLASSES, SCENARIOS, Request,
+                                 default_budgets, make_trace)
+
+BUDGETS = {"interactive": 1.0, "standard": 2.0, "relaxed": 5.0}
+
+
+def _trace(scenario="poisson", n=200, seed=0, **kw):
+    kw.setdefault("target_images_per_s", 100.0)
+    kw.setdefault("budgets_s", BUDGETS)
+    return make_trace(scenario, n, seed, **kw)
+
+
+def _req(rid, t, size=1, klass="standard", budget=2.0):
+    return Request(rid=rid, arrival_s=t, size=size, klass=klass,
+                   deadline_s=t + budget, seed=rid)
+
+
+def _sched(buckets=(1, 4, 8), svc=0.1, **kw):
+    model = {b: svc * (0.5 + 0.5 * b / max(buckets)) for b in buckets}
+    return MicroBatchScheduler(buckets, model, **kw)
+
+
+# -- trace generator --------------------------------------------------------
+
+@pytest.mark.parametrize("scenario", SCENARIOS)
+def test_trace_seeded_determinism(scenario):
+    a = _trace(scenario)
+    b = _trace(scenario)
+    assert a.requests == b.requests
+    c = _trace(scenario, seed=1)
+    assert c.requests != a.requests
+
+
+@pytest.mark.parametrize("scenario", SCENARIOS)
+def test_trace_structure(scenario):
+    tr = _trace(scenario, n=300)
+    arr = [r.arrival_s for r in tr.requests]
+    assert arr == sorted(arr) and arr[0] > 0
+    assert {r.klass for r in tr.requests} <= set(DEADLINE_CLASSES)
+    for r in tr.requests:
+        assert r.size >= 1
+        assert r.deadline_s == pytest.approx(r.arrival_s + BUDGETS[r.klass])
+    # Offered image rate lands on the target: exactly for the renormalized
+    # modulated scenarios, law-of-large-numbers close for raw Poisson.
+    rate = tr.total_images / tr.horizon_s
+    assert rate == pytest.approx(100.0,
+                                 rel=0.25 if scenario == "poisson" else 1e-6)
+
+
+def test_trace_oversize_and_max_size():
+    tr = _trace("poisson", n=500, max_size=8, oversize_prob=0.1)
+    sizes = np.array([r.size for r in tr.requests])
+    assert sizes.max() > 8           # some oversize requests were drawn
+    assert (sizes[sizes <= 8] >= 1).all()
+    none = _trace("poisson", n=200, max_size=8, oversize_prob=0.0)
+    assert max(r.size for r in none.requests) <= 8
+
+
+def test_bursty_has_idle_gaps_poisson_does_not():
+    gaps = lambda tr: np.diff([0.0] + [r.arrival_s for r in tr.requests])
+    mean_p = gaps(_trace("poisson", n=400)).mean()
+    g_b = gaps(_trace("bursty", n=400))
+    # The on/off process produces gaps far beyond anything a same-rate
+    # Poisson process plausibly emits relative to its own mean.
+    assert g_b.max() > 4 * mean_p
+
+
+def test_diurnal_ramps_rate_mid_trace():
+    tr = _trace("diurnal", n=900)
+    gaps = np.diff([0.0] + [r.arrival_s for r in tr.requests])
+    third = len(gaps) // 3
+    edge = np.concatenate([gaps[:third], gaps[-third:]]).mean()
+    mid = gaps[third:2 * third].mean()
+    assert mid < edge                # faster arrivals at the peak
+
+
+def test_default_budgets_scale_with_service():
+    b1, b2 = default_budgets(0.1), default_budgets(0.2)
+    for k in DEADLINE_CLASSES:
+        assert b2[k] == pytest.approx(2 * b1[k])
+        assert b1[k] > 0
+
+
+# -- scheduler: ordering ----------------------------------------------------
+
+def test_fifo_within_deadline_class():
+    """Within one class, dispatch order is arrival order — across many
+    batches and interleaved classes."""
+    s = _sched(buckets=(1, 4, 8))
+    rid = 0
+    for i in range(20):
+        klass = DEADLINE_CLASSES[i % 3]
+        s.offer(_req(rid, t=0.01 * i, klass=klass,
+                     budget=BUDGETS[klass]), now=0.01 * i)
+        rid += 1
+    order = {k: [] for k in DEADLINE_CLASSES}
+    t = 1.0
+    while s.has_queued():
+        batch = s.form_batch(t, drain=True)
+        for p in batch.parts:
+            order[p.req.klass].append(p.rid)
+        t += 0.01
+    for k, rids in order.items():
+        assert rids == sorted(rids), f"class {k} served out of arrival order"
+
+
+def test_heads_fill_by_earliest_deadline():
+    s = _sched(buckets=(1, 4, 8))
+    s.offer(_req(0, t=0.0, klass="relaxed", budget=5.0), now=0.0)
+    s.offer(_req(1, t=0.1, klass="interactive", budget=1.0), now=0.1)
+    batch = s.form_batch(10.0, drain=True)
+    # interactive head (deadline 1.1) outranks the earlier-arrived relaxed
+    # head (deadline 5.0) — but both fit, and FIFO within class holds.
+    assert [p.rid for p in batch.parts] == [1, 0]
+
+
+# -- scheduler: fill-or-deadline triggers -----------------------------------
+
+def test_fill_dispatches_immediately():
+    s = _sched(buckets=(1, 4, 8))
+    for i in range(8):
+        s.offer(_req(i, t=0.0), now=0.0)
+    batch = s.form_batch(0.0)
+    assert batch is not None and batch.reason == "fill"
+    assert batch.n_images == 8 and batch.bucket == 8 and batch.padding == 0
+
+
+def test_partial_waits_until_linger_then_pads():
+    s = _sched(buckets=(1, 4, 8), linger_s=0.5, slack_s=0.01)
+    s.offer(_req(0, t=0.0, size=3, budget=100.0), now=0.0)
+    assert s.form_batch(0.0) is None          # no trigger yet
+    assert s.form_batch(0.49) is None
+    assert s.next_forced_dispatch_s() == pytest.approx(0.5)
+    batch = s.form_batch(0.5)
+    assert batch is not None and batch.reason == "linger"
+    assert batch.n_images == 3 and batch.bucket == 4 and batch.padding == 1
+
+
+def test_deadline_slack_forces_before_linger():
+    svc_max = 0.1           # _sched's service model at the max bucket
+    s = _sched(buckets=(1, 4, 8), linger_s=100.0, slack_s=0.1)
+    s.offer(_req(0, t=0.0, size=2, budget=1.0), now=0.0)
+    forced = s.next_forced_dispatch_s()
+    assert forced == pytest.approx(1.0 - svc_max - 0.1)
+    assert s.form_batch(forced - 1e-6) is None
+    batch = s.form_batch(forced)
+    assert batch is not None and batch.reason == "deadline"
+
+
+def test_infinite_thresholds_only_fill_or_drain():
+    s = _sched(buckets=(1, 4, 8), linger_s=float("inf"),
+               slack_s=float("inf"))
+    s.offer(_req(0, t=0.0, size=2, budget=float("inf")), now=0.0)
+    assert s.next_forced_dispatch_s() is None
+    assert s.form_batch(1e9) is None
+    batch = s.form_batch(1e9, drain=True)
+    assert batch is not None and batch.reason == "drain"
+
+
+# -- scheduler: admission + splitting ---------------------------------------
+
+def test_admission_control_sheds_whole_requests():
+    s = _sched(buckets=(1, 4, 8), max_queue_images=10)
+    assert s.offer(_req(0, t=0.0, size=8), now=0.0)
+    assert not s.offer(_req(1, t=0.0, size=4), now=0.0)   # 12 > 10: shed
+    assert s.offer(_req(2, t=0.0, size=2), now=0.0)       # still fits
+    assert s.shed_requests == 1 and s.shed_images == 4
+    assert s.queued_images == 10 and s.admitted_requests == 2
+
+
+def test_oversize_request_splits_into_max_bucket_parts():
+    s = _sched(buckets=(1, 4, 8))
+    s.offer(_req(0, t=0.0, size=20), now=0.0)
+    assert s.queued_images == 20
+    batches = []
+    t = 0.0
+    while s.has_queued():
+        b = s.form_batch(t, drain=True)
+        batches.append(b)
+        t += 1.0
+    assert [b.n_images for b in batches] == [8, 8, 4]
+    assert [(p.part_idx, p.offset, p.size) for b in batches
+            for p in b.parts] == [(0, 0, 8), (1, 8, 8), (2, 16, 4)]
+
+
+def test_scheduler_is_deterministic():
+    def play():
+        s = _sched(buckets=(1, 4, 8), linger_s=0.3)
+        log = []
+        rid = 0
+        for i in range(30):
+            t = 0.05 * i
+            klass = DEADLINE_CLASSES[i % 3]
+            s.offer(_req(rid, t=t, size=1 + i % 5, klass=klass,
+                         budget=BUDGETS[klass]), now=t)
+            rid += 1
+            b = s.form_batch(t)
+            if b is not None:
+                log.append((b.formed_s, b.reason, b.bucket,
+                            tuple(p.rid for p in b.parts)))
+        while s.has_queued():
+            b = s.form_batch(100.0, drain=True)
+            log.append((b.formed_s, b.reason, b.bucket,
+                        tuple(p.rid for p in b.parts)))
+        return log
+
+    assert play() == play()
+
+
+# -- shared metrics schema --------------------------------------------------
+
+def test_latency_summary_schema():
+    out = latency_summary([0.1, 0.2, 0.3, 0.4])
+    assert set(out) == {"p50_s", "p95_s", "p99_s", "mean_s", "max_s", "n"}
+    assert out["n"] == 4 and out["max_s"] == pytest.approx(0.4)
+    assert out["p50_s"] <= out["p95_s"] <= out["p99_s"] <= out["max_s"]
+    one = latency_summary([0.7])
+    assert one["p50_s"] == one["p99_s"] == pytest.approx(0.7)
+    empty = latency_summary([])
+    assert empty["n"] == 0 and empty["p99_s"] == 0.0
+
+
+def test_padding_waste():
+    assert padding_waste(0, 0) == 0.0
+    assert padding_waste(6, 8) == pytest.approx(0.25)
+    assert padding_waste(8, 8) == 0.0

@@ -1,0 +1,267 @@
+"""Traffic frontend with real engines in the loop: end-to-end report
+invariants, replica-count logit parity, replay determinism, oversize
+splitting parity with direct engine calls, recompile-freedom under a mixed
+trace, and the data-parallel (batch → data sharded) arm."""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.policy import DENSE, SHIFTADD, STAGE1
+from repro.nn.vit import ShiftAddViT, ViTConfig
+from repro.serve.frontend import (calibrate_service_model, serve_trace,
+                                  traffic_sweep)
+from repro.serve.replicas import ThreadPoolReplicas, make_replicas
+from repro.serve.scheduler import MicroBatchScheduler
+from repro.serve.traffic import Request, make_trace
+from repro.serve.vision import build_policy_model
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+BUDGETS = {"interactive": 2.0, "standard": 4.0, "relaxed": 10.0}
+
+
+def _models(policy_name="shiftadd"):
+    cfg = ViTConfig(image_size=16, patch_size=4, n_layers=2, d_model=32,
+                    n_heads=2, d_ff=64)
+    dense_model = ShiftAddViT(dataclasses.replace(cfg, policy=DENSE))
+    dense_params = dense_model.init(jax.random.PRNGKey(0))
+    model, params = build_policy_model(cfg, policy_name, dense_model,
+                                       dense_params)
+    return model, params
+
+
+def _pool(policy="shiftadd", n=1, buckets=(1, 4, 8), **kw):
+    model, params = _models(policy)
+    return ThreadPoolReplicas(model, params, n_replicas=n, buckets=buckets,
+                              **kw).warmup()
+
+
+# Synthetic service model: timing decisions in these tests must not depend
+# on machine speed (logits still run through the real engine).
+SVC = {1: 0.010, 4: 0.020, 8: 0.030}
+
+
+def _sched(buckets=(1, 4, 8), **kw):
+    kw.setdefault("max_queue_images", 64)
+    return MicroBatchScheduler(buckets, SVC, **kw)
+
+
+def _trace(scenario="poisson", n=40, seed=0, rate=400.0, max_size=8, **kw):
+    return make_trace(scenario, n, seed, target_images_per_s=rate,
+                      budgets_s=BUDGETS, max_size=max_size, **kw)
+
+
+def test_end_to_end_report_invariants():
+    pool = _pool("shiftadd", n=2)
+    res = serve_trace(pool, _sched(), _trace(n=40))
+    r = res.report
+    assert r["requests"] == 40
+    assert r["served_requests"] + r["shed_requests"] == 40
+    assert r["recompiles_after_warmup"] == 0
+    assert r["deadline_miss_rate"] == 0.0          # calibrated-feasible load
+    assert r["buckets"] == [1, 4, 8]               # read off the engine
+    assert 0.0 <= r["padding_waste"] < 1.0
+    assert r["goodput_images_per_s"] > 0
+    assert r["latency"]["p50_s"] <= r["latency"]["p99_s"]
+    assert r["batches"] == len(res.batches) > 0
+    assert sum(r["dispatch_reasons"].values()) == r["batches"]
+    # every served request got logits with its own row count
+    for req in res.requests:
+        assert not req["shed"]
+        assert res.logits[req["rid"]].shape == (req["size"], 10)
+    pool.close()
+
+
+def test_no_recompiles_under_mixed_trace():
+    """The trace_count acceptance criterion at the frontend level: a mixed
+    size/class/scenario stream over warm buckets never retraces."""
+    pool = _pool("shiftadd", n=2)
+    base = pool.trace_count
+    assert base == len(pool.buckets)               # warmup: one per bucket
+    for scenario, seed in (("poisson", 1), ("bursty", 2), ("diurnal", 3)):
+        serve_trace(pool, _sched(), _trace(scenario, n=25, seed=seed))
+    assert pool.trace_count == base, "frontend retraced after warmup"
+    pool.close()
+
+
+@pytest.mark.parametrize("policy", ["stage1", "shiftadd"])
+def test_replay_same_seed_identical_routing_and_logits(policy):
+    """Replaying the same seeded trace must reproduce the routing signature
+    and the logits bit-identically — for shiftadd too: identical batches
+    make the MoE co-batching caveat moot within a replay."""
+    pool = _pool(policy, n=2)
+    trace = _trace(n=30, seed=7)
+    a = serve_trace(pool, _sched(), trace)
+    b = serve_trace(pool, _sched(), trace)
+    assert a.routing_signature() == b.routing_signature()
+    for rid in a.logits:
+        np.testing.assert_array_equal(a.logits[rid], b.logits[rid])
+    pool.close()
+
+
+def test_one_vs_n_replicas_bit_identical_logits_moe_free():
+    """At a load where no dispatch ever waits on a busy replica, batch
+    formation is replica-count-invariant — so 1 and 3 replicas form the
+    SAME batches through the SAME bucket programs and per-request logits
+    are bit-identical for MoE-free policies. (At saturating load the batch
+    compositions diverge and only allclose-level parity holds — the
+    co-batching/batch-shape caveat documented in serve/vision.py.)"""
+    model, params = _models("stage1")
+    # Light enough that no dispatch instant ever finds the single replica
+    # busy or more than one batch dispatchable (seed checked to be in that
+    # regime; the composition assertion below keeps the test self-diagnosing).
+    trace = _trace(n=30, seed=3, rate=5.0)
+    outs = {}
+    for n in (1, 3):
+        pool = ThreadPoolReplicas(model, params, n_replicas=n,
+                                  buckets=(1, 4, 8)).warmup()
+        outs[n] = serve_trace(pool, _sched(), trace)
+        pool.close()
+    composition = lambda res: [(b["formed_s"], b["bucket"], b["parts"])
+                               for b in res.batches]
+    assert composition(outs[1]) == composition(outs[3])
+    for rid in outs[1].logits:
+        np.testing.assert_array_equal(outs[1].logits[rid],
+                                      outs[3].logits[rid])
+
+
+def test_oversize_split_parity_with_direct_engine_call():
+    """A lone oversize request must produce bit-identical logits through
+    the scheduler's split path and through BucketedViTEngine.infer's own
+    chunking — same chunk boundaries, same bucket programs, and (shiftadd
+    included) each chunk batched alone in both paths."""
+    pool = _pool("shiftadd", n=1)
+    size = 20                                      # > max bucket 8 → 8+8+4
+    req = Request(rid=0, arrival_s=0.01, size=size, klass="relaxed",
+                  deadline_s=10.0, seed=123)
+    trace_obj = make_trace("poisson", 1, 0, target_images_per_s=100.0,
+                           budgets_s=BUDGETS)
+    trace = dataclasses.replace(trace_obj, requests=(req,))
+    res = serve_trace(pool, _sched(), trace)
+    assert [b["n_images"] for b in res.batches] == [8, 8, 4]
+    cfg = pool.engines[0].model.cfg
+    imgs = jax.random.normal(
+        jax.random.PRNGKey(req.seed),
+        (size, cfg.image_size, cfg.image_size, cfg.in_channels))
+    want = pool.engines[0].infer(imgs)
+    np.testing.assert_array_equal(res.logits[0], np.asarray(want))
+    pool.close()
+
+
+def test_admission_control_sheds_under_overload():
+    """Overload (tiny queue bound, high rate, one slow slot) must shed
+    rather than grow the queue without bound, and shed requests count as
+    deadline misses."""
+    pool = _pool("shiftadd", n=1)
+    sched = MicroBatchScheduler((1, 4, 8), {1: 1.0, 4: 1.0, 8: 1.0},
+                                max_queue_images=8)
+    res = serve_trace(pool, sched, _trace(n=30, rate=2000.0))
+    r = res.report
+    assert r["shed_requests"] > 0
+    assert r["deadline_miss_rate"] > 0
+    assert r["served_requests"] + r["shed_requests"] == 30
+    shed_rids = {q["rid"] for q in res.requests if q["shed"]}
+    assert shed_rids and all(rid not in res.logits for rid in shed_rids)
+    pool.close()
+
+
+def test_traffic_sweep_record_schema():
+    """The BENCH_traffic.json record shape the CI gate consumes, including
+    replay verification fields and the p99 crossover ratio."""
+    cfg = ViTConfig(image_size=16, patch_size=4, n_layers=2, d_model=32,
+                    n_heads=2, d_ff=64)
+    rec = traffic_sweep(cfg, scenario="poisson",
+                        policies=("dense", "shiftadd"), n_requests=25,
+                        seed=0, replicas=2, arm="thread", buckets=(1, 4, 8),
+                        verify_replay=True, calibrate_iters=1)
+    assert set(rec["policies"]) == {"dense", "shiftadd"}
+    for r in rec["policies"].values():
+        assert r["recompiles_after_warmup"] == 0
+        assert r["deadline_miss_rate"] == 0.0
+        assert r["replay_identical_routing"] is True
+        assert r["replay_bit_identical_logits"] is True
+        assert {"p50_s", "p95_s", "p99_s"} <= set(r["latency"])
+    assert rec["shiftadd_vs_dense_p99"] > 0
+    assert rec["trace"]["requests"] == 25
+
+
+def test_per_replica_engines_arm():
+    """share_engine=False (one engine per slot) still serves identical
+    logits — the compiled programs are deterministic clones."""
+    model, params = _models("stage1")
+    trace = _trace(n=15, seed=9)
+    shared = ThreadPoolReplicas(model, params, n_replicas=2,
+                                buckets=(1, 4, 8)).warmup()
+    isolated = ThreadPoolReplicas(model, params, n_replicas=2,
+                                  buckets=(1, 4, 8),
+                                  share_engine=False).warmup()
+    assert len(shared.engines) == 1 and len(isolated.engines) == 2
+    assert isolated.trace_count == 2 * shared.trace_count
+    a = serve_trace(shared, _sched(), trace)
+    b = serve_trace(isolated, _sched(), trace)
+    for rid in a.logits:
+        np.testing.assert_array_equal(a.logits[rid], b.logits[rid])
+    shared.close()
+    isolated.close()
+
+
+def test_data_parallel_arm_on_host_devices():
+    """The sharded arm (8 simulated host devices): buckets round up to
+    device-count multiples, the batch → data rule shards rows, logits match
+    the single-device path, and warm traffic never retraces."""
+    code = """
+        import dataclasses, jax, numpy as np
+        from repro.core.policy import DENSE
+        from repro.nn.vit import ShiftAddViT, ViTConfig
+        from repro.serve.frontend import serve_trace
+        from repro.serve.replicas import DataParallelReplicas, make_replicas
+        from repro.serve.scheduler import MicroBatchScheduler
+        from repro.serve.traffic import make_trace
+        from repro.serve.vision import build_policy_model
+
+        cfg = ViTConfig(image_size=16, patch_size=4, n_layers=2, d_model=32,
+                        n_heads=2, d_ff=64)
+        dense_model = ShiftAddViT(dataclasses.replace(cfg, policy=DENSE))
+        dense_params = dense_model.init(jax.random.PRNGKey(0))
+        model, params = build_policy_model(cfg, "stage1", dense_model,
+                                           dense_params)
+        pool = make_replicas(model, params, n_replicas=4, arm="auto",
+                             buckets=(1, 4, 8)).warmup()
+        assert isinstance(pool, DataParallelReplicas), pool
+        assert pool.buckets == (4, 8), pool.buckets   # rounded up to 4s
+        assert pool.n_slots == 1
+        base = pool.trace_count
+        sched = MicroBatchScheduler(pool.buckets,
+                                    {4: 0.02, 8: 0.03},
+                                    max_queue_images=64)
+        trace = make_trace("poisson", 20, 0, target_images_per_s=300.0,
+                           budgets_s={"interactive": 2.0, "standard": 4.0,
+                                      "relaxed": 10.0}, max_size=8)
+        res = serve_trace(pool, sched, trace)
+        assert pool.trace_count == base, "sharded arm retraced"
+        assert res.report["deadline_miss_rate"] == 0.0
+        single = build_policy_model(cfg, "stage1", dense_model, dense_params)
+        eng = __import__("repro.serve.vision", fromlist=["BucketedViTEngine"]
+                         ).BucketedViTEngine(model, params, buckets=(4, 8))
+        for req in trace.requests:
+            imgs = jax.random.normal(
+                jax.random.PRNGKey(req.seed),
+                (req.size, 16, 16, 3))
+            want = np.asarray(eng.infer(imgs))
+            np.testing.assert_allclose(res.logits[req.rid], want,
+                                       rtol=1e-5, atol=1e-5)
+        print("sharded-arm OK")
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "sharded-arm OK" in out.stdout

@@ -87,6 +87,16 @@ def test_engine_bucket_selection_and_chunking():
     assert out.shape == (19, 10)
     assert engine.images_served == 19
     assert engine.batches_served == 3              # 8 + 8 + 3→bucket 4
+    assert engine.padded_images_served == 20       # 8 + 8 + bucket 4
+    assert engine.padding_waste == pytest.approx(1 - 19 / 20)
+
+
+def test_engine_surfaces_effective_buckets():
+    """The engine normalizes (sorts, dedups) its bucket set and surfaces it;
+    records/gates read it from here instead of re-declaring."""
+    model, params, _ = _vit(DENSE)
+    engine = BucketedViTEngine(model, params, buckets=(8, 1, 4, 4))
+    assert engine.buckets == (1, 4, 8)
 
 
 @pytest.mark.parametrize("policy", [DENSE, STAGE1, SHIFTADD])
@@ -174,11 +184,17 @@ def test_policy_sweep_record_shape_and_energy_claim():
                     n_heads=2, d_ff=64)
     rec = policy_sweep(cfg, batch=8, iters=2, buckets=(8,))
     assert set(rec["policies"]) == {"dense", "stage1", "shiftadd"}
+    assert rec["buckets"] == [8]                # engine-surfaced, not redeclared
     for r in rec["policies"].values():
         assert r["latency_s_per_batch"] > 0
         assert r["images_per_s"] > 0
         assert r["energy_pj_per_image"] > 0
         assert r["recompiles_after_warmup"] == 0
+        # Shared BENCH_* summary schema (serve.metrics) + engine-read buckets.
+        assert {"p50_s", "p95_s", "p99_s", "mean_s"} <= set(r["latency"])
+        assert r["latency"]["p50_s"] <= r["latency"]["p99_s"]
+        assert r["buckets"] == rec["buckets"]
+        assert r["padding_waste"] == 0.0        # batch == bucket: no padding
     assert (rec["policies"]["shiftadd"]["energy_pj_per_image"]
             < rec["policies"]["dense"]["energy_pj_per_image"])
 
