@@ -11,8 +11,11 @@ capacity, then replayed unchanged against each policy — so
 `shiftadd_vs_dense_p99` compares the same requests, same arrivals, same
 deadlines, and reflects purely how much faster the reparameterized engine
 drains the queue. CI gates (benchmarks/check_traffic.py): zero recompiles
-after warmup, zero deadline misses at the calibrated default load, and
-shiftadd p99 at or below dense p99.
+after warmup, zero deadline misses at the calibrated default load, shiftadd
+p99 at or below dense p99, bit-identical seeded replay on EVERY arm
+(shiftadd's MoE included — per-image capacity dispatch made it
+batch-invariant), and 1-vs-N-replica bit-identical per-request logits under
+diverging batch compositions (`one_vs_n_bit_identical_logits`).
 """
 from __future__ import annotations
 
@@ -30,20 +33,21 @@ from repro.serve.traffic import SCENARIOS
 
 def run(scenario="poisson", requests=300, seed=0, replicas=2, arm="auto",
         utilization=0.4, image_size=56, layers=4, d_model=128, impl=None,
-        verify_replay=True):
+        verify_replay=True, verify_one_vs_n=True):
     cfg = ViTConfig(image_size=image_size, n_layers=layers, d_model=d_model,
                     d_ff=2 * d_model)
     return traffic_sweep(
         cfg, scenario=scenario, policies=("dense", "stage1", "shiftadd"),
         n_requests=requests, seed=seed, replicas=replicas, arm=arm,
-        utilization=utilization, impl=impl, verify_replay=verify_replay)
+        utilization=utilization, impl=impl, verify_replay=verify_replay,
+        verify_one_vs_n=verify_one_vs_n)
 
 
 def main(rows=None):
     if rows is not None:
         # benchmarks/run.py harness mode: tiny geometry, CSV row contract.
         rec = run(requests=40, image_size=16, layers=2, d_model=32,
-                  verify_replay=False)
+                  verify_replay=False, verify_one_vs_n=False)
         for name, r in rec["policies"].items():
             rows.append((f"traffic_{name}_p99", r["latency"]["p99_s"] * 1e6,
                          f"goodput_img_s={r['goodput_images_per_s']:.1f}"))

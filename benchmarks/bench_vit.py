@@ -21,7 +21,10 @@ counts (recompiles_after_warmup must be 0 — gated in CI), the freeze state,
 and the latency ratio vs the dense arm (`shiftadd_vs_dense_latency` is the
 paper's crossover, gated ≤ 1.0 in the acceptance criteria). `--breakdown`
 adds measured attention / MLP-MoE / dispatch / other component rows in
-bench_breakdown.py's table style.
+bench_breakdown.py's table style, plus — on MoE arms — `dispatch_global`
+(the legacy flattened-co-batch dispatch) and `dispatch_delta`
+(per-image − global), so the hot-path cost of the batch-invariant
+per-image capacity dispatch stays visible in the BENCH_vit.json trajectory.
 """
 from __future__ import annotations
 
@@ -118,6 +121,9 @@ def main(rows=None):
         # additive split is attention + mlp_moe + other; dispatch is a
         # SUBSET of mlp_moe (routing machinery re-measured in isolation),
         # so its row is annotated as such rather than given a fraction.
+        # dispatch_global re-measures the LEGACY flattened-co-batch
+        # dispatch; the delta row is what the per-image batch-invariance
+        # refactor costs (+) or saves (−) on the hot path per batch.
         for name, r in rec["policies"].items():
             bd = r["breakdown"]
             for comp in ("attention", "mlp_moe", "other"):
@@ -127,7 +133,16 @@ def main(rows=None):
                     f"fraction_of_total={frac:.2f}")))
             print(",".join(str(c) for c in (
                 f"serve_{name}_dispatch", bd["dispatch_s"] * 1e6,
-                "subset_of_mlp_moe")))
+                "subset_of_mlp_moe;per_image_capacities")))
+            if bd["dispatch_global_s"]:
+                print(",".join(str(c) for c in (
+                    f"serve_{name}_dispatch_global",
+                    bd["dispatch_global_s"] * 1e6,
+                    "legacy_flattened_co_batch_capacities")))
+                print(",".join(str(c) for c in (
+                    f"serve_{name}_dispatch_delta",
+                    bd["dispatch_delta_s"] * 1e6,
+                    "per_image_minus_global")))
     if "shiftadd_vs_dense_latency" in rec:
         print(f"shiftadd vs dense latency: "
               f"{rec['shiftadd_vs_dense_latency']:.3f}x (frozen={rec['frozen']})")

@@ -9,13 +9,26 @@ Fails (exit 1) if, on the calibrated default-load trace:
   tightness; the virtual clock makes this machine-independent),
 - the shiftadd arm's per-request p99 exceeds the dense arm's on the same
   trace (the serving-level restatement of the paper's latency crossover),
-- a replay-verification field is present and false (routing or logits
-  failed to reproduce bit-identically under the same seed).
+- a replay/1-vs-N verification field is false, OR is MISSING from the
+  shiftadd arm. The shiftadd arm used to be silently exempt: before the
+  per-image capacity dispatch its logits depended on co-batching, the
+  bench could not verify it, and the gate's `if key in record` let the
+  absence pass. Batch invariance (ISSUE 5) makes the determinism gates
+  policy-complete, so an absent field on shiftadd now means the benchmark
+  did not verify what this gate exists to verify — a failure, not a skip.
+
+Verification fields: `replay_identical_routing` /
+`replay_bit_identical_logits` (same seed, same pool → same routing, same
+bits) and `one_vs_n_bit_identical_logits` (same trace on a one-slot pool →
+different batch compositions, same per-request bits).
 """
 from __future__ import annotations
 
 import json
 import sys
+
+VERIFY_KEYS = ("replay_identical_routing", "replay_bit_identical_logits",
+               "one_vs_n_bit_identical_logits")
 
 
 def main(argv):
@@ -35,14 +48,41 @@ def main(argv):
         if r["shed_requests"] > 0:
             failures.append(f"{name}: {r['shed_requests']} requests shed at "
                             f"the calibrated default load")
-        for key in ("replay_identical_routing",
-                    "replay_bit_identical_logits"):
-            if key in r and not r[key]:
-                failures.append(f"{name}: {key} is false — the seeded trace "
-                                f"did not replay deterministically")
+        for key in VERIFY_KEYS:
+            if key not in r:
+                if name == "shiftadd":
+                    failures.append(
+                        f"{name}: {key} missing — the benchmark did not "
+                        f"run the determinism verification on the MoE arm "
+                        f"(the batch-invariance gate may not be skipped)")
+            elif not r[key]:
+                failures.append(f"{name}: {key} is false — per-request "
+                                f"logits are not deterministic/"
+                                f"batch-invariant under this arm")
+        total_requests = rec.get("trace", {}).get("requests")
+        if "one_vs_n_bit_identical_logits" in r and (
+                r.get("one_vs_n_solo_shed", 0) > 0
+                or (total_requests is not None
+                    and r.get("one_vs_n_compared") != total_requests)):
+            # A partial verification must not impersonate a full one: every
+            # request of the trace must appear in BOTH runs' logits (the
+            # solo pool serves with an unbounded queue precisely so nothing
+            # is shed; a logits-collection or reassembly regression would
+            # also shrink the compared count and land here).
+            failures.append(
+                f"{name}: 1-vs-N verification was partial — "
+                f"{r.get('one_vs_n_compared', '?')} of "
+                f"{total_requests} requests compared "
+                f"(solo pool shed {r.get('one_vs_n_solo_shed', '?')})")
+        labels = {"replay_identical_routing": "routing",
+                  "replay_bit_identical_logits": "replay",
+                  "one_vs_n_bit_identical_logits": "1vsN"}
         print(f"{name:>9}: p99 {r['latency']['p99_s'] * 1e3:.1f} ms  "
               f"miss {r['deadline_miss_rate']:.3f}  "
-              f"recompiles {r['recompiles_after_warmup']}")
+              f"recompiles {r['recompiles_after_warmup']}  "
+              f"verify [" + " ".join(
+                  f"{labels[k]}={r.get(k, 'absent')}"
+                  for k in VERIFY_KEYS) + "]")
     ratio = rec.get("shiftadd_vs_dense_p99")
     if ratio is None:
         failures.append("record has no shiftadd_vs_dense_p99 "

@@ -18,8 +18,12 @@ materializes a `DeployPlan`:
   the int8 kernel format (impl="pallas"/"interpret": the Pallas kernel
   decodes in VMEM, which is already free). Both decodes are bit-exact, so
   frozen inference has EXACT logit parity with unfrozen inference.
-- **MoE capacities/offsets** for the serving token-group sizes are
-  precomputed into each `MoEPrimitives.capacity_plan` memo.
+- **MoE capacities/offsets** are precomputed into each
+  `MoEPrimitives.capacity_plan` memo for the PER-IMAGE token counts the
+  serving dispatch routes over (one routing group per batch row — ISSUE 5).
+  Tokens-per-image is a property of the model geometry, not of the bucket,
+  so one warmed count covers every bucket and the plan is identical for an
+  image no matter which co-batch it arrives in.
 
 The plan's `params` tree is what the serving engine's jitted forward closes
 over; `ShiftLinear.__call__` recognizes the frozen leaves, so `infer` paths
@@ -73,7 +77,10 @@ class DeployPlan:
     impl: kernel implementation the decode targeted ("xla"|"pallas"|"interpret").
     frozen_linears: how many shift subtrees were decoded/packed.
     moe_layers: how many MoE feeds had capacity plans warmed.
-    token_counts: per-group token counts the capacity plans were warmed for.
+    token_counts: PER-IMAGE token counts the capacity plans were warmed for
+      (the serving dispatch routes one group per batch row, so these are
+      tokens-per-image — e.g. `cfg.n_patches` for the ViT engine — not
+      flattened co-batch group sizes).
     """
 
     params: Any
@@ -108,8 +115,9 @@ def prepare_inference(model, params, impl=None, token_counts=()) -> DeployPlan:
     model: anything with an optional `blocks` list whose block feeds may be
       `MoEPrimitives` (ShiftAddViT, TransformerBlock stacks, ...). Only the
       param tree is required; the model is consulted to warm MoE capacity
-      plans for `token_counts` (per-group token counts of the serving
-      buckets) so dispatch trace time pays no capacity math either.
+      plans for `token_counts` (PER-IMAGE token counts — the serving
+      dispatch plans capacity per batch row) so dispatch trace time pays no
+      capacity math either.
     """
     from repro.core.moe_primitives import MoEPrimitives
     from repro.kernels import ops

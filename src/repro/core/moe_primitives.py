@@ -11,6 +11,12 @@ TPU adaptation of the paper's TVM/Nimble dynamic dispatch (DESIGN.md §2):
 twin of the LL-loss objective. Experts run as independent sharded branches, so
 the paper's "ideal parallelism" (modularized latency = max over experts) is
 the native execution model under SPMD, not a simulation.
+
+Training groups tokens across the flattened co-batch (`group_tokens`);
+SERVING plans capacity per image row (`group_rows` + the memoized per-image
+`capacity_plan`), so an image's routing — and therefore its logits — is
+independent of whatever the scheduler co-batched it with (ISSUE 5 tentpole;
+the batch-invariance property tier pins it).
 """
 from __future__ import annotations
 
@@ -175,9 +181,13 @@ class MoEPrimitives:
 
     def capacity_plan(self, n_tokens: int):
         """Memoized (caps, offsets) for a per-group token count — the static
-        capacity math hoisted out of every trace. `core.deploy`'s
-        prepare_inference warms this for the serving buckets at engine-build
-        time; cold lookups still compute (and memoize) on first trace."""
+        capacity math hoisted out of every trace. At serve time the group IS
+        one image row (`nn.dispatch.group_rows`), so `n_tokens` is the
+        tokens-PER-IMAGE count and the plan is the per-image capacity split:
+        every image gets the same static caps regardless of what it is
+        co-batched with. `core.deploy`'s prepare_inference warms this for
+        the serving geometry at engine-build time; cold lookups still
+        compute (and memoize) on first trace."""
         plan = self._capacity_plans.get(n_tokens)
         if plan is None:
             caps = self.capacities(n_tokens)
@@ -236,15 +246,25 @@ class MoEPrimitives:
         _, top1, gate = self._gates(clean_logits, clean_logits)
         return top1, gate[..., 0].astype(jnp.float32)
 
-    def _dispatch_tokens(self, params, x):
+    def _dispatch_tokens(self, params, x, grouping="image"):
         """Shared serving front half: group → route (clean argmax) →
         gather-ordered dispatch. Returns (buf, info, segments, ungroup) with
         `segments` the per-expert static views of the buffer. Single home so
         `infer` and the breakdown probe `dispatch_only` can never diverge on
-        the dispatch they measure/serve."""
-        from repro.nn.dispatch import dispatch_infer, group_tokens
+        the dispatch they measure/serve.
 
-        xg, ungroup = group_tokens(x, self.d_model)
+        grouping="image" (the serving default) plans capacity PER BATCH ROW
+        (`nn.dispatch.group_rows`): each image competes only with itself for
+        expert slots, so per-image outputs are independent of co-batching —
+        the batch-invariance contract. grouping="flat" is the legacy
+        flattened-co-batch grouping (`group_tokens`), kept ONLY as the A/B
+        arm of the dispatch-cost breakdown benchmark."""
+        from repro.nn.dispatch import (dispatch_infer, group_rows,
+                                       group_tokens)
+
+        assert grouping in ("image", "flat"), grouping
+        group = group_rows if grouping == "image" else group_tokens
+        xg, ungroup = group(x, self.d_model)
         _, s, _ = xg.shape
         top1, gate = self._route_infer(params, xg)
         caps, offsets = self.capacity_plan(s)
@@ -256,14 +276,19 @@ class MoEPrimitives:
     def infer(self, params, x):
         """Deterministic inference dispatch — the serving fast path.
 
-        Routes on clean-logit argmax (no router noise, no rng) with the same
-        static latency-aware capacities as training, and computes none of the
-        aux/LL-loss statistics. Dispatch is the gather-ordered segment path
-        (nn.dispatch.dispatch_infer): no scatter-into-zeros, experts consume
-        per-expert static views, the combine is a per-token gather — and the
-        capacity/offset math comes from the memoized `capacity_plan` (warmed
-        by core.deploy at engine build). Two calls on the same input produce
-        identical outputs. Returns y only.
+        Routes on clean-logit argmax (no router noise, no rng) with static
+        latency-aware capacities planned PER IMAGE ROW (one routing group
+        per batch row, capacities from the per-image token count), and
+        computes none of the aux/LL-loss statistics. Dispatch is the
+        gather-ordered segment path (nn.dispatch.dispatch_infer): no
+        scatter-into-zeros, experts consume per-expert static views, the
+        combine is a per-token gather — and the capacity/offset math comes
+        from the memoized `capacity_plan` (warmed by core.deploy at engine
+        build). Two calls on the same input produce identical outputs, and
+        a given image's output is bit-identical regardless of which
+        neighbors it is batched with, its row position, or batch padding
+        (no token ever competes with another image's tokens for capacity).
+        Returns y only.
         """
         from repro.nn.dispatch import combine_infer
 
@@ -272,12 +297,16 @@ class MoEPrimitives:
                 for i, (expert, seg) in enumerate(zip(self.experts, segments))]
         return ungroup(combine_infer(outs, info)).astype(x.dtype)
 
-    def dispatch_only(self, params, x):
+    def dispatch_only(self, params, x, grouping="image"):
         """Routing + dispatch + combine with identity experts — isolates the
-        dispatch machinery's cost for the component-breakdown benchmark."""
+        dispatch machinery's cost for the component-breakdown benchmark.
+        grouping="flat" measures the legacy flattened-co-batch dispatch so
+        the per-image refactor's hot-path cost stays visible in the bench
+        trajectory (BENCH_vit.json's dispatch rows)."""
         from repro.nn.dispatch import combine_infer
 
-        _, info, segments, ungroup = self._dispatch_tokens(params, x)
+        _, info, segments, ungroup = self._dispatch_tokens(params, x,
+                                                           grouping=grouping)
         return ungroup(combine_infer(segments, info)).astype(x.dtype)
 
     def __call__(self, params, x, train=True, rng=None):

@@ -71,6 +71,11 @@ def main(argv=None):
     ap.add_argument("--verify-replay", action="store_true",
                     help="serve the trace twice and check routing + logits "
                          "replay bit-identically")
+    ap.add_argument("--verify-one-vs-n", action="store_true",
+                    help="re-serve the trace on a one-slot pool and check "
+                         "per-request logits are bit-identical despite the "
+                         "diverging batch compositions (the batch-"
+                         "invariance contract, every policy arm)")
     ap.add_argument("--out", default="BENCH_traffic.json")
     args = ap.parse_args(argv)
 
@@ -91,7 +96,8 @@ def main(argv=None):
         max_queue_images=args.max_queue_images,
         target_p99_s=None if args.target_p99 is None
         else args.target_p99 / 1e3,
-        verify_replay=args.verify_replay)
+        verify_replay=args.verify_replay,
+        verify_one_vs_n=args.verify_one_vs_n)
     with open(args.out, "w") as f:
         json.dump(rec, f, indent=2)
 
@@ -113,6 +119,11 @@ def main(argv=None):
             log.info("%9s: replay identical routing=%s, bit-identical "
                      "logits=%s", name, r["replay_identical_routing"],
                      r["replay_bit_identical_logits"])
+        if "one_vs_n_bit_identical_logits" in r:
+            log.info("%9s: 1-vs-N bit-identical logits=%s (batches "
+                     "diverged=%s)", name,
+                     r["one_vs_n_bit_identical_logits"],
+                     r["one_vs_n_diverged_batches"])
         recompiled |= r["recompiles_after_warmup"] > 0
     if rec.get("shiftadd_vs_dense_p99") is not None:
         log.info("shiftadd vs dense p99: %.3fx", rec["shiftadd_vs_dense_p99"])

@@ -126,9 +126,12 @@ class TransformerBlock:
         train=False, but mixers take their serving path (fused bidirectional
         Hamming attention for encoder binary-linear mode) and MoE feeds their
         deterministic gather dispatch (clean-logit argmax, no rng, no
-        balance/drop bookkeeping). Returns x only — the serving engines jit
-        this, typically closed over a core.deploy DeployPlan's frozen params
-        so no per-call weight decode survives in the compiled program."""
+        balance/drop bookkeeping) with capacity planned PER BATCH ROW — a
+        row's output never depends on its co-batched neighbors, so the whole
+        block forward is batch-invariant per row. Returns x only — the
+        serving engines jit this, typically closed over a core.deploy
+        DeployPlan's frozen params so no per-call weight decode survives in
+        the compiled program."""
         h = self.norm1(params["norm1"], x)
         mix = self._infer_mixer(params, h, positions)
         if self.parallel:

@@ -182,7 +182,14 @@ def combine_infer(expert_outs, info):
 
 
 def group_tokens(x, d_model, target_group=4096, min_groups=32):
-    """(..., d) → (G, S, d) plus an ungroup closure."""
+    """(..., d) → (G, S, d) plus an ungroup closure.
+
+    TRAINING grouping: the token axis is flattened across batch rows and cut
+    into G size-balanced groups (see module docstring for why). Group
+    boundaries therefore ignore image/sequence boundaries — a token's
+    capacity competitors are whatever the flattening put next to it, which
+    is statistically fine for training but makes an image's routing depend
+    on its co-batched neighbors. Serving uses `group_rows` instead."""
     lead = x.shape[:-1]
     tokens = 1
     for s in lead:
@@ -193,5 +200,36 @@ def group_tokens(x, d_model, target_group=4096, min_groups=32):
 
     def ungroup(y):
         return y.reshape(*lead, d_model)
+
+    return xg, ungroup
+
+
+def group_rows(x, d_model):
+    """(..., S, d) → (G, S, d) with ONE routing group per batch row, plus an
+    ungroup closure — the SERVING grouping (ISSUE 5 tentpole).
+
+    Each image (batch row) is its own capacity domain: expert capacities are
+    planned from the per-row token count and every dispatch op is vmapped
+    over rows, so a row's routing reads nothing but that row's tokens. This
+    is the batch-invariance contract the shiftadd serving path asserts:
+    per-image logits are bit-identical across batch composition, row order,
+    bucket padding and replica count. Tokens-per-row is static per engine
+    bucket, so shapes (and the memoized capacity plan) stay jit-stable.
+
+    A 2-D input (S, d) is treated as a single row. Rows shard over the
+    mesh's batch axes exactly like the flattened grouping did — per-row
+    dispatch is device-local under the `batch → data` rule."""
+    if x.ndim == 2:
+        xg = x[None]
+    else:
+        lead = x.shape[:-2]
+        rows = 1
+        for s in lead:
+            rows *= int(s)
+        xg = x.reshape(rows, x.shape[-2], d_model)
+    xg = constrain(xg, ("batch", None, None))
+
+    def ungroup(y):
+        return y.reshape(*x.shape[:-1], d_model)
 
     return xg, ungroup

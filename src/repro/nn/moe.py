@@ -12,6 +12,15 @@ Composition with the paper (DESIGN.md §5): under `policy.mlp="shift"` /
 beyond-paper composition of the two MoE levels. Expert weights then store the
 *latent* shift parameters; the forward fake-quantizes with STE exactly like
 ShiftLinear (we inline it here because the weights are stacked per expert).
+
+Grouping note (ISSUE 5): this module routes over FLATTENED token groups
+(`group_tokens`) in both train and eval — appropriate for LM training,
+where group boundaries are a sharding concern and there is no per-request
+bit-identity contract. The paper's `MoEPrimitives` is the one with a
+serving engine behind it; ITS inference dispatch plans capacity per image
+row (`group_rows`) and carries the batch-invariance guarantee. If a
+TokenChoiceMoE model ever grows a batched serving path, give it the same
+per-row treatment before wiring it into the traffic gates.
 """
 from __future__ import annotations
 

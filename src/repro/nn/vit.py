@@ -114,17 +114,33 @@ class ShiftAddViT:
         The serving forward (repro.serve.vision jits this): no aux-loss
         computation, binary-linear attention through the fused bidirectional
         op, MoE feeds through the deterministic gather dispatch on
-        clean-logit argmax — no rng anywhere, so two calls on the same batch
-        return identical logits. Pass a DeployPlan's frozen params (see
-        `prepare_inference`) to also hoist every shift-weight decode out of
-        the compiled program; logits are bit-identical either way.
+        clean-logit argmax with capacity planned per image row — no rng
+        anywhere, so two calls on the same batch return identical logits.
+        Pass a DeployPlan's frozen params (see `prepare_inference`) to also
+        hoist every shift-weight decode out of the compiled program; logits
+        are bit-identical either way.
+
+        Batch-invariance contract (ISSUE 5): a given image's logits are
+        bit-identical no matter what it is batched with, in which row, at
+        which bucket padding, on how many replicas. Every reduction in the
+        forward is within-row (attention/MLP/norms reduce over tokens or
+        channels of one image; the MoE capacity domain is one row), and the
+        classifier head below is written as an explicit broadcast-multiply
+        + within-row reduce rather than a (B, d)·(d, k) dot: XLA CPU picks
+        a different gemm/gemv strategy for tiny-M matmuls as M crosses ~1,
+        which was the one op whose row values depended on the batch size.
         """
         x = self.patch_embed(params["patch_embed"],
                              self.patchify(images).astype(self.mc.activation_dtype))
         for blk, p in zip(self.blocks, params["blocks"]):
             x = blk.infer(p, x, positions=None)
         x = self.final_norm(params["final_norm"], x)
-        return self.head(params["head"], jnp.mean(x, axis=1))
+        pooled = jnp.mean(x, axis=1)                       # (B, d)
+        w = params["head"]["kernel"].astype(pooled.dtype)
+        logits = jnp.sum(pooled[:, :, None] * w[None], axis=1)
+        if "bias" in params["head"]:
+            logits = logits + params["head"]["bias"].astype(pooled.dtype)
+        return logits
 
     def loss(self, params, batch, train=True):
         logits, aux = self(params, batch["images"], train=train)

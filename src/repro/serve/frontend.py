@@ -15,14 +15,16 @@ ran*:
 Every scheduling decision is therefore a pure function of (trace,
 calibration, knobs): replaying the same seeded trace reproduces the exact
 same per-request routing — same batches, same buckets, same replica slots —
-and, because the engine itself is deterministic, the same logits. For
-MoE-free policies (dense/stage1) per-request logits are additionally
-independent of co-batching, so they are bit-identical across 1 vs N
-replicas and vs direct engine calls; under the shiftadd MoE policy logits
-are deterministic PER BATCH but can shift if a different replica count or
-knob changes which requests share a batch (tokens compete for expert
-capacity — the `serve/vision.py` co-batching caveat, surfaced here at the
-scheduler level).
+and, because the engine itself is deterministic, the same logits. Logits
+are moreover BATCH-INVARIANT per image for every policy arm, shiftadd
+included (MoE capacity is planned per image row — serve/vision.py's
+batch-invariance contract): a request's logits are bit-identical across
+1 vs N replicas, oversize splits, co-batching and direct engine calls,
+even when a different replica count or knob changes which requests share a
+batch. `traffic_sweep(verify_one_vs_n=True)` re-serves each arm's trace on
+a single replica and records that the per-request logits survived the
+(generally different) batch compositions bit-for-bit — a gate that had to
+exclude MoE policies before the per-image dispatch refactor.
 
 The virtual clock also makes the CI gates noise-immune: deadline-miss rate
 and goodput depend on machine speed only through the calibration, and since
@@ -286,7 +288,7 @@ def traffic_sweep(base_cfg=None, *, scenario="poisson",
                   freeze=True, impl=None, max_size=None, slack_frac=0.5,
                   linger_frac=1.0, max_queue_images=None, target_p99_s=None,
                   calibrate_iters=3, verify_replay=False,
-                  collect_logits=False) -> dict:
+                  verify_one_vs_n=False, collect_logits=False) -> dict:
     """Serve one seeded trace through every policy arm; return the
     BENCH_traffic.json record.
 
@@ -303,14 +305,20 @@ def traffic_sweep(base_cfg=None, *, scenario="poisson",
 
     verify_replay: serve the trace twice per arm and record whether the
     routing signature and the logits replay bit-identically (they must —
-    the determinism acceptance criterion; for MoE arms this holds because
-    identical batches are formed, the co-batching caveat notwithstanding).
+    the determinism acceptance criterion, MoE arms included).
+
+    verify_one_vs_n: additionally serve each arm's trace through a ONE-slot
+    thread pool over the same buckets/knobs and record
+    `one_vs_n_bit_identical_logits`: per-request logits must survive the
+    (generally different) single-replica batch compositions bit-for-bit —
+    the serving-level statement of the per-image batch-invariance contract,
+    CI-gated on the shiftadd arm by benchmarks/check_traffic.py.
     """
     import dataclasses as _dc
 
     from repro.core.policy import DENSE
     from repro.nn.vit import ShiftAddViT, ViTConfig
-    from repro.serve.replicas import make_replicas
+    from repro.serve.replicas import ThreadPoolReplicas, make_replicas
     from repro.serve.traffic import default_budgets, make_trace
     from repro.serve.vision import DEFAULT_BUCKETS, build_policy_model
 
@@ -321,9 +329,11 @@ def traffic_sweep(base_cfg=None, *, scenario="poisson",
     shape = (base_cfg.image_size, base_cfg.image_size, base_cfg.in_channels)
 
     pools = {}
+    arms = {}
     for name in policies:
         model, params = build_policy_model(base_cfg, name, dense_model,
                                            dense_params)
+        arms[name] = (model, params)
         pools[name] = make_replicas(model, params, n_replicas=replicas,
                                     arm=arm, buckets=buckets, freeze=freeze,
                                     impl=impl).warmup()
@@ -375,7 +385,8 @@ def traffic_sweep(base_cfg=None, *, scenario="poisson",
                                   else 8 * pmax))
 
         res = serve_trace(pool, make_sched(), trace,
-                          collect_logits=collect_logits or verify_replay)
+                          collect_logits=(collect_logits or verify_replay
+                                          or verify_one_vs_n))
         rep = res.report
         if target_p99_s is not None:
             rep["slo_attained"] = rep["latency"]["p99_s"] <= target_p99_s
@@ -387,6 +398,41 @@ def traffic_sweep(base_cfg=None, *, scenario="poisson",
             rep["replay_bit_identical_logits"] = all(
                 np.array_equal(res.logits[r], res2.logits[r])
                 for r in res.logits)
+        if verify_one_vs_n:
+            # A one-slot thread pool over the SAME effective buckets and
+            # batching knobs: batch compositions generally differ from the
+            # N-slot arm's, and per-request logits must not care
+            # (batch-invariance contract; a fresh engine also makes this a
+            # program-clone check). The solo run gets an UNBOUNDED
+            # admission queue — it faces N× its calibrated share, and a
+            # shed request cannot be compared at all; since the contract
+            # says every scheduler knob is logit-neutral, deepening the
+            # queue is itself one of the perturbations being verified, and
+            # it buys full coverage by construction. The record still
+            # carries the compared/shed counts and check_traffic.py fails
+            # on a partial comparison, so a future regression in either
+            # cannot silently hollow the gate out.
+            model, params = arms[name]
+            solo = ThreadPoolReplicas(model, params, n_replicas=1,
+                                      buckets=pool.buckets, freeze=freeze,
+                                      impl=impl).warmup()
+            pmax_solo = solo.buckets[-1]
+            solo_sched = MicroBatchScheduler(
+                solo.buckets, svc,
+                slack_s=slack_frac * svc[pmax_solo],
+                linger_s=linger_frac * svc[pmax_solo],
+                max_queue_images=None)
+            res1 = serve_trace(solo, solo_sched, trace,
+                               collect_logits=True)
+            solo.close()
+            common = set(res.logits) & set(res1.logits)
+            rep["one_vs_n_diverged_batches"] = (
+                res.routing_signature() != res1.routing_signature())
+            rep["one_vs_n_compared"] = len(common)
+            rep["one_vs_n_solo_shed"] = res1.report["shed_requests"]
+            rep["one_vs_n_bit_identical_logits"] = bool(common) and all(
+                np.array_equal(res.logits[r], res1.logits[r])
+                for r in common)
         record["policies"][name] = rep
         pool.close()
     if "dense" in record["policies"] and len(record["policies"]) > 1:

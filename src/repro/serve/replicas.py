@@ -7,9 +7,13 @@ hardware is this module's concern:
   `ThreadPoolExecutor`. By default all slots share ONE
   `BucketedViTEngine` — a jitted executable is stateless and thread-safe,
   so sharing keeps warmup at one compile per bucket no matter how many
-  replicas, and makes 1-vs-N logit parity structural (same program, same
-  batches). `share_engine=False` builds one engine per slot (full isolation,
+  replicas. `share_engine=False` builds one engine per slot (full isolation,
   R× the warmup compiles — the shape a future multi-process pool takes).
+  1-vs-N logit parity does NOT depend on the sharing, nor on replicas
+  forming the same batches: the engine forward is batch-invariant per image
+  (per-image MoE capacity dispatch, serve/vision.py), so per-request logits
+  are bit-identical across replica counts even when batch compositions
+  diverge — the `one_vs_n_bit_identical_logits` gate asserts exactly this.
 
 - **DataParallelReplicas** (the multi-device arm): ONE slot whose engine
   shards every batch row-wise across a `("data",)` device mesh via
@@ -18,7 +22,10 @@ hardware is this module's concern:
   (the calibrated service model picks the speedup up automatically) instead
   of multiplying concurrent batches. Buckets are rounded up to multiples of
   the device count by the engine; read the effective set off
-  `pool.buckets`.
+  `pool.buckets`. Row-sharding composes with the per-image dispatch (a
+  row's routing reads only that row), so sharded logits are bit-identical
+  to the single-device path — shiftadd included, pinned by the
+  data-parallel arm test in tests/test_traffic_serve.py.
 
 `make_replicas(..., arm="auto")` picks data-parallel when the backend has
 enough devices, else the thread pool — so the same frontend code serves a

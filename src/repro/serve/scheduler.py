@@ -34,6 +34,13 @@ admission into max-bucket parts that dispatch independently (the frontend
 reassembles logits in part order), mirroring `BucketedViTEngine.infer`'s own
 chunking, so a lone oversize request produces bit-identical logits through
 the scheduler and through a direct engine call.
+
+**Logit freedom.** None of these decisions can move a logit: the engine
+forward is batch-invariant per image (per-image MoE capacity dispatch —
+serve/vision.py's contract), so the scheduler may co-batch, split, reorder
+across classes, pad and shed freely, for every policy arm including the
+shiftadd MoE, with zero logit consequences. Scheduling chooses WHEN work
+runs and WHAT shares a program launch — never what a request's answer is.
 """
 from __future__ import annotations
 

@@ -18,11 +18,12 @@ end-to-end, not per-layer):
 
 - **Deployment freeze** (`freeze=True`, the default): the engine builds a
   `core.deploy.DeployPlan` at construction — every shift weight decoded or
-  packed exactly once, MoE capacity plans warmed for the buckets — and the
-  jitted forward closes over the frozen params as constants. Frozen and
-  unfrozen logits are bit-identical (the decode is exact); the freeze only
-  removes the per-call fake-quant/decode work from the compiled program.
-  `freeze=False` is the A/B arm the benchmark and CI compare against.
+  packed exactly once, the MoE capacity plan warmed for the per-image token
+  count — and the jitted forward closes over the frozen params as
+  constants. Frozen and unfrozen logits are bit-identical (the decode is
+  exact); the freeze only removes the per-call fake-quant/decode work from
+  the compiled program. `freeze=False` is the A/B arm the benchmark and CI
+  compare against.
 
 - **Policy sweep** (`policy_sweep`): the same pretrained dense params pushed
   through `convert_from` at stage 0/1/2, measured for batch latency,
@@ -30,11 +31,15 @@ end-to-end, not per-layer):
   from core.energy's Tab.-1 unit energies + data-movement terms). Drives
   benchmarks/bench_vit.py → BENCH_vit.json and repro.launch.serve_vit.
 
-Batching note: MoE feeds route per token group with finite capacity, so under
-the shiftadd policy an image's logits can depend on its co-batched requests
-(tokens compete for expert slots; earlier rows win ties). Dense/stage-1
-policies are MoE-free and strictly per-image. Either way the engine is
-deterministic: identical batch in, identical logits out.
+**Batch-invariance contract** (ISSUE 5): MoE feeds plan expert capacity PER
+IMAGE ROW (`MoEPrimitives.infer` routes one group per batch row with the
+memoized per-image `capacity_plan`), so under EVERY sweep policy — shiftadd
+included — an image's logits are bit-identical across batch composition,
+row order, bucket padding and replica count. Tokens never compete with
+another image's tokens for expert slots; the scheduler may co-batch, split
+and shed requests freely with zero logit consequences. The property tier
+(tests/test_batch_invariance.py) and the traffic gates
+(benchmarks/check_traffic.py replay + 1-vs-N on the shiftadd arm) pin this.
 """
 from __future__ import annotations
 
@@ -83,7 +88,6 @@ class BucketedViTEngine:
     def __init__(self, model: ShiftAddViT, params, buckets=DEFAULT_BUCKETS,
                  freeze=True, impl=None, mesh=None):
         from repro.kernels import ops
-        from repro.nn.dispatch import choose_groups
 
         assert len(buckets) > 0 and min(buckets) >= 1
         self.model = model
@@ -128,13 +132,13 @@ class BucketedViTEngine:
             jit_kw = dict(in_shardings=shd.batch_sharding(mesh, rank=4),
                           out_shardings=shd.batch_sharding(mesh, rank=2))
         if freeze:
-            # Per-group token counts the MoE dispatch will see, one per bucket.
-            counts = set()
-            for b in self.buckets:
-                tokens = b * model.cfg.n_patches
-                counts.add(tokens // choose_groups(tokens))
-            self.plan = model.prepare_inference(params, impl=self.impl,
-                                                token_counts=sorted(counts))
+            # The MoE dispatch routes one group per image row, so the only
+            # token count it ever plans capacity for is the per-image patch
+            # count — identical across buckets (a bucket changes how many
+            # rows are vmapped over, never a row's capacity split).
+            self.plan = model.prepare_inference(
+                params, impl=self.impl,
+                token_counts=(model.cfg.n_patches,))
             run_params = self.plan.params
 
             # Frozen params are closed over, not passed: they are constants
@@ -289,7 +293,12 @@ def component_breakdown(model: ShiftAddViT, run_params, images, iters=10):
     path), dispatch (MoE routing + gather dispatch + combine with identity
     experts — the pure machinery cost; a SUBSET of mlp_moe_s, not an
     additive fourth component), and other (total minus attention and
-    mlp_moe: patchify/embed/final norm/head/residual glue). Each component is jitted
+    mlp_moe: patchify/embed/final norm/head/residual glue). For MoE arms a
+    `dispatch_global_s` row re-measures the LEGACY flattened-co-batch
+    dispatch (group_tokens + whole-batch capacity plan) next to the served
+    per-image dispatch, and `dispatch_delta_s` = per-image − global records
+    what the batch-invariance refactor costs (or saves) on the hot path —
+    the BENCH_vit.json trajectory row ISSUE 5 asks for. Each component is jitted
     standalone on the real activation shapes and the components are timed
     INTERLEAVED round-robin (medians over `iters` rounds), so machine-load
     drift hits every component equally — independently-timed components on a
@@ -311,12 +320,17 @@ def component_breakdown(model: ShiftAddViT, run_params, images, iters=10):
             x = x + blk._infer_feed(p, blk.norm2(p["norm2"], x))
         return x
 
-    def dispatch_all(x):
+    def dispatch_all(grouping):
         from repro.core.moe_primitives import MoEPrimitives
-        for blk, p in zip(model.blocks, run_params["blocks"]):
-            if isinstance(blk.feed, MoEPrimitives):
-                x = blk.feed.dispatch_only(p["feed"], x)
-        return x
+
+        def run(x):
+            for blk, p in zip(model.blocks, run_params["blocks"]):
+                if isinstance(blk.feed, MoEPrimitives):
+                    x = blk.feed.dispatch_only(p["feed"], x,
+                                               grouping=grouping)
+            return x
+
+        return run
 
     has_moe = any(hasattr(blk.feed, "dispatch_only") for blk in model.blocks)
     components = {
@@ -325,7 +339,8 @@ def component_breakdown(model: ShiftAddViT, run_params, images, iters=10):
         "mlp_moe_s": (jax.jit(feed_all), x0),
     }
     if has_moe:
-        components["dispatch_s"] = (jax.jit(dispatch_all), x0)
+        components["dispatch_s"] = (jax.jit(dispatch_all("image")), x0)
+        components["dispatch_global_s"] = (jax.jit(dispatch_all("flat")), x0)
     samples = {name: [] for name in components}
     for name, (f, arg) in components.items():
         jax.block_until_ready(f(arg))                    # compile
@@ -336,6 +351,8 @@ def component_breakdown(model: ShiftAddViT, run_params, images, iters=10):
             samples[name].append(time.perf_counter() - t0)
     out = {name: sorted(ts)[len(ts) // 2] for name, ts in samples.items()}
     out.setdefault("dispatch_s", 0.0)
+    out.setdefault("dispatch_global_s", 0.0)
+    out["dispatch_delta_s"] = out["dispatch_s"] - out["dispatch_global_s"]
     out["other_s"] = max(out["total_s"] - out["attention_s"]
                          - out["mlp_moe_s"], 0.0)
     return out

@@ -134,6 +134,76 @@ def test_no_drop_regression_at_capacity_factor_125():
     assert float(aux["drop_fraction"]) == 0.0
 
 
+def test_per_image_capacity_plan_covers_tokens():
+    """The serving capacity domain is one image row (ISSUE 5): for every
+    plausible tokens-per-image count, sum(caps) >= tokens-per-image at
+    capacity_factor >= 1.0, and the memoized plan's offsets are the running
+    prefix sums the segment views slice by."""
+    for cf in (1.0, 1.25, 2.0):
+        moe = MoEPrimitives(16, 32, capacity_factor=cf)
+        for n in (16, 49, 64, 196, 197):
+            caps, offsets = moe.capacity_plan(n)
+            assert sum(caps) >= n, (cf, n, caps)
+            assert all(0 <= c <= n for c in caps), (cf, n, caps)
+            assert offsets[0] == 0
+            assert all(offsets[i + 1] - offsets[i] == caps[i]
+                       for i in range(len(caps) - 1))
+            # The memo returns the identical object on the hot path.
+            assert moe.capacity_plan(n) is moe._capacity_plans[n]
+
+
+def _steered(capacity_factor=1.25):
+    """MoE whose router deterministically sends tokens with x[...,0] > 0 to
+    expert 0 and the rest to expert 1 — the steering rig of the global
+    regression above, reused for its per-image twin."""
+    moe = MoEPrimitives(16, 32, capacity_factor=capacity_factor,
+                        latency_aware=False)
+    params = moe.init(jax.random.PRNGKey(0))
+    w = jnp.zeros((16, 2)).at[0, 0].set(4.0).at[0, 1].set(-4.0)
+    return moe, dict(params, router={"kernel": w})
+
+
+def _routed(moe, params, signs):
+    """signs: (B, S) ±1 routing steer → per-image keep mask of the serving
+    dispatch (info["keep"]; 1 − mean(keep) is the drop fraction)."""
+    b, s = signs.shape
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, 16)) * 0.1
+    x = x.at[:, :, 0].set(jnp.asarray(signs, jnp.float32))
+    _, info, _, _ = moe._dispatch_tokens(params, x)
+    return np.asarray(info["keep"])
+
+
+def test_no_drop_regression_per_image_capacities_at_cf_125():
+    """drop_fraction == 0 at capacity_factor 1.25 under PER-IMAGE
+    capacities: every image routes an exact 4/4 split of its 8 tokens
+    against per-image caps of ceil(1.25·8/2) = 5 — small per-image groups
+    must never round a cap below an image's share."""
+    moe, params = _steered(1.25)
+    caps, _ = moe.capacity_plan(8)
+    assert sum(caps) >= 8 and min(caps) >= 4
+    signs = np.tile(np.repeat([1.0, -1.0], 4), (4, 1))       # 4 images, 4/4
+    keep = _routed(moe, params, signs)
+    assert keep.all(), "per-image dispatch dropped tokens at cf 1.25"
+
+
+def test_per_image_drops_are_row_local():
+    """Drops are accounted per image: an image overflowing its own expert
+    capacity loses exactly its overflow, and a neighbor's overflow can
+    never steal another image's slots (the capacity-competition confound
+    the per-image refactor removes)."""
+    moe, params = _steered(1.25)
+    caps, _ = moe.capacity_plan(8)                 # uniform → (5, 5)
+    hog = np.ones((1, 8))                          # all 8 → expert 0: keeps 5
+    fair = np.tile(np.repeat([1.0, -1.0], 4), (1, 1))        # 4/4: keeps all
+    alone_hog = _routed(moe, params, hog)
+    alone_fair = _routed(moe, params, fair)
+    together = _routed(moe, params, np.concatenate([hog, fair]))
+    assert alone_hog.sum() == caps[0] == 5
+    assert alone_fair.all()
+    np.testing.assert_array_equal(together[0], alone_hog[0])
+    np.testing.assert_array_equal(together[1], alone_fair[0])
+
+
 def test_infer_matches_call_and_is_deterministic():
     """The inference dispatch path must equal the train=False forward and be
     bit-stable across calls (no rng consumed anywhere)."""

@@ -28,8 +28,16 @@ def _imgs(n, seed=0, size=16):
 @pytest.mark.parametrize("policy", [DENSE, STAGE1, SHIFTADD])
 def test_infer_matches_train_false_call(policy):
     """The aux-free fast path must compute the same logits as the full
-    forward with train=False (router noise off, clean-logit argmax)."""
-    model, params, _ = _vit(policy)
+    forward with train=False (router noise off, clean-logit argmax).
+
+    The MoE arm runs at ample capacity: serving plans capacity PER IMAGE
+    (batch-invariance contract) while the training forward plans it over
+    the flattened co-batch, so the two paths agree exactly when no token is
+    dropped in either grouping — every token then goes through its top-1
+    expert with its clean gate regardless of capacity-domain boundaries.
+    (Under tight capacity the drop SETS legitimately differ; that serving
+    semantics change is pinned by tests/test_batch_invariance.py instead.)"""
+    model, params, _ = _vit(policy, moe_capacity=8.0)
     imgs = _imgs(6)
     fast = model.infer(params, imgs)
     full, _aux = model(params, imgs, train=False)
