@@ -1,0 +1,50 @@
+"""CI gate wrapper for the serving-contract static analyzer (static-analysis
+job), and the analyzer's row in benchmarks/run.py's rows contract.
+
+    python benchmarks/check_analysis.py [TABLE_PATH]
+
+Standalone: runs `repro.analysis.check` with --fail-on-findings (exit 1 on
+any active finding), writing the kernel × geometry contract table artifact
+to TABLE_PATH (default: the CLI's artifacts/analysis/ location).
+
+As a harness module: `main(rows)` appends one row per pass —
+(analysis_<pass>, wall-us, finding/cell counts) — so the analyzer's cost and
+coverage ride along the benchmark CSV like every other check script.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main(rows) -> None:
+    from repro.analysis import check as acheck
+    from repro.analysis.findings import split_allowlisted
+
+    for name in acheck.PASSES:
+        t0 = time.time()
+        findings, info = acheck.run_passes((name,))
+        active, waived = split_allowlisted(findings)
+        us = (time.time() - t0) * 1e6
+        derived = f"findings={len(active)} waived={len(waived)}"
+        if name == "kernels":
+            rowset = info["contract_rows"]
+            derived += (f" cells={len(rowset)} overflow="
+                        f"{sum(c.classification == 'vmem_overflow' for c in rowset)}")
+        elif name == "jaxpr":
+            derived += f" programs={len(info['audited_programs'])}"
+        else:
+            derived += f" files={info['linted_files']}"
+        rows.append((f"analysis_{name}", us, derived))
+
+
+if __name__ == "__main__":
+    from repro.analysis import check as acheck
+
+    argv = ["--fail-on-findings"]
+    if len(sys.argv) > 1:
+        argv += ["--table", sys.argv[1]]
+    sys.exit(acheck.main(argv))

@@ -1,0 +1,27 @@
+"""Serving-contract static analysis (ISSUE 6 tentpole).
+
+Three passes over the frozen serving surface, one CLI
+(``python -m repro.analysis.check``), one CI gate:
+
+- **jaxpr_audit** — builds the jaxpr of every frozen serving entry point
+  (each `BucketedViTEngine` bucket program across the sweep policies, the LM
+  prefill / scan-fused decode) and statically asserts the invariants PRs 3-5
+  enforce only at runtime: no host callbacks, no float64 / weak-type values
+  crossing jaxpr boundaries, identical dtype signatures across buckets (the
+  recompile-hazard class), declared buffer donation actually consumed, and a
+  determinism allowlist (no rng, no float scatter-adds) on `infer` paths.
+- **kernel_contracts** — the kernel × bucket-geometry compatibility matrix:
+  for every Pallas kernel in `repro.kernels` at every bucket geometry,
+  classify the cell tile_aligned / pad_and_slice / vmem_overflow, with the
+  VMEM-residency estimate and the roofline cost terms. The table is the
+  search-space validator for the ROADMAP autotune layer.
+- **lint** — AST jit-hazard lint over `src/repro`: host ops (`np.*`,
+  `.item()`, `float()`) reachable from jitted functions, trace-time mutable
+  state, rng threading into `infer*` functions, jit wrappers missing
+  donation on cache/state-shaped arguments.
+
+Findings share one schema (`findings.Finding`); suppression is explicit and
+reviewable (inline ``# lint: allow(RULE reason)`` for AST findings, the
+`findings.ALLOWLIST` table for pass-level ones).
+"""
+from repro.analysis.findings import Finding  # noqa: F401

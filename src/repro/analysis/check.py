@@ -1,0 +1,109 @@
+"""`python -m repro.analysis.check` — the serving-contract static gate.
+
+Runs the three passes (jaxpr serving audit, Pallas kernel contract checker,
+AST jit-hazard lint), prints every finding, writes the kernel × geometry
+contract table artifact, and — with ``--fail-on-findings`` — exits 1 on any
+finding that is not allowlisted. This is the CI `static-analysis` job; it is
+also registered in benchmarks/run.py's rows contract via
+benchmarks/check_analysis.py.
+
+No compilation and no kernel execution happens here: the audit stops at
+`jax.make_jaxpr`/`.lower()`, the contract table is arithmetic over the
+wrappers' block-selection rules, and the lint is pure AST. The whole gate
+runs in seconds on a CPU-only runner.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+
+from repro.analysis import jaxpr_audit, kernel_contracts, lint
+from repro.analysis.findings import split_allowlisted
+
+DEFAULT_TABLE = os.path.join("artifacts", "analysis", "ANALYSIS_contracts.json")
+
+PASSES = ("jaxpr", "kernels", "lint")
+
+
+def run_passes(passes=PASSES):
+    """→ (findings, info dict with the contract rows + inventories)."""
+    findings, info = [], {}
+    if "jaxpr" in passes:
+        f, audited = jaxpr_audit.run()
+        findings += f
+        info["audited_programs"] = [dataclasses.asdict(a) for a in audited]
+    if "kernels" in passes:
+        f, rows = kernel_contracts.run()
+        findings += f
+        info["contract_rows"] = rows
+    if "lint" in passes:
+        f, n_files = lint.run()
+        findings += f
+        info["linted_files"] = n_files
+    return findings, info
+
+
+def write_table(rows, path):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    payload = {
+        "vmem_budget_bytes": kernel_contracts.VMEM_BUDGET_BYTES,
+        "classifications": ["tile_aligned", "pad_and_slice", "vmem_overflow"],
+        "cells": [c.row() for c in rows],
+    }
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=1, sort_keys=True)
+    return path
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.check",
+        description="Serving-contract static analyzer (jaxpr audit + kernel "
+                    "contracts + jit-hazard lint)")
+    ap.add_argument("--fail-on-findings", action="store_true",
+                    help="exit 1 if any non-allowlisted finding remains")
+    ap.add_argument("--table", default=DEFAULT_TABLE,
+                    help=f"contract-table artifact path (default {DEFAULT_TABLE})")
+    ap.add_argument("--passes", default=",".join(PASSES),
+                    help="comma-separated subset of: jaxpr,kernels,lint")
+    args = ap.parse_args(argv)
+
+    passes = tuple(p for p in args.passes.split(",") if p)
+    unknown = set(passes) - set(PASSES)
+    if unknown:
+        ap.error(f"unknown pass(es): {sorted(unknown)}")
+
+    t0 = time.time()
+    findings, info = run_passes(passes)
+    active, waived = split_allowlisted(findings)
+
+    if "contract_rows" in info:
+        rows = info["contract_rows"]
+        print(kernel_contracts.format_table(rows))
+        path = write_table(rows, args.table)
+        n_over = sum(c.classification == "vmem_overflow" for c in rows)
+        n_pad = sum(c.classification == "pad_and_slice" for c in rows)
+        print(f"\ncontract table: {len(rows)} cells "
+              f"({n_pad} pad_and_slice, {n_over} vmem_overflow) → {path}")
+    if "audited_programs" in info:
+        print(f"jaxpr audit: {len(info['audited_programs'])} serving "
+              "programs traced")
+    if "linted_files" in info:
+        print(f"lint: {info['linted_files']} modules walked")
+
+    for f in waived:
+        print(f"ALLOWED  {f.format()}")
+    for f in active:
+        print(f"FINDING  {f.format()}")
+    status = "FAIL" if (active and args.fail_on_findings) else "OK"
+    print(f"\n{status}: {len(active)} active finding(s), {len(waived)} "
+          f"allowlisted, in {time.time() - t0:.1f}s")
+    return 1 if (active and args.fail_on_findings) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,49 @@
+"""Shared finding schema + allowlist for the static-analysis passes.
+
+A `Finding` is one violated serving contract, pinned to a source location or
+a serving entry point. The CLI (`repro.analysis.check`) prints them and, with
+``--fail-on-findings``, fails CI on any finding that is not allowlisted.
+
+Two suppression mechanisms, both explicit and reviewable:
+
+- **inline** (AST lint only): a ``# lint: allow(RULE reason)`` comment on the
+  flagged line or the line above it. The reason is part of the comment so the
+  waiver is auditable at the use site (e.g. the engine's trace-time compile
+  counter).
+- **ALLOWLIST** (any pass): a ``(rule, where_substring, reason)`` row below.
+  Used for findings that have no single source line (jaxpr-level facts).
+  Keep it short; every row is a standing debt.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str        # e.g. "JX003" — stable rule id, documented in README
+    where: str       # "path/file.py:line" or "vit/shiftadd/bucket=8"
+    message: str     # one line: what contract is violated and by what
+    pass_name: str   # "jaxpr" | "kernels" | "lint"
+
+    def format(self) -> str:
+        return f"[{self.pass_name}:{self.rule}] {self.where}: {self.message}"
+
+
+# (rule, where-substring, reason). A finding is allowlisted when its rule
+# matches exactly and `where_substring in finding.where`.
+ALLOWLIST: tuple = (
+)
+
+
+def split_allowlisted(findings, allowlist=None):
+    """Partition findings into (active, allowlisted) under the ALLOWLIST."""
+    allowlist = ALLOWLIST if allowlist is None else allowlist
+    active, waived = [], []
+    for f in findings:
+        if any(rule == f.rule and where in f.where
+               for rule, where, _reason in allowlist):
+            waived.append(f)
+        else:
+            active.append(f)
+    return active, waived

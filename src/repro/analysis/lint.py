@@ -1,0 +1,337 @@
+"""Pass 3: AST jit-hazard lint over src/repro.
+
+Finds Python-side hazards that jaxprs cannot show (they happen at trace
+time or poison the trace cache) by walking each module's AST, building the
+set of functions reachable from a jit root, and checking:
+
+=====  ===========================================================
+LT001  `np.*(param)` — a numpy call applied to a traced argument
+       inside a jit-reachable function (silent host fallback or
+       TracerError at call time)
+LT002  host sync inside a jit-reachable function: `.item()`,
+       `.tolist()`, or `float()/int()/bool()` applied to a traced
+       argument
+LT003  rng threading into an `infer*` function (a named rng/key
+       parameter or a `jax.random.*` call) — infer paths are
+       contractually deterministic (see jaxpr_audit JX006)
+LT004  trace-time mutable state: assignment to `self.*` or a
+       `global`/`nonlocal` statement inside a jit-reachable
+       function (runs once per TRACE, not per call)
+LT005  `jax.jit` wrapper whose wrapped function takes a cache/
+       state-shaped parameter without donating it (the serving
+       convention: decode caches and train states are donated)
+=====  ===========================================================
+
+Jit roots: functions decorated with `jax.jit` (bare or via
+functools.partial), function names/lambdas passed to `jax.jit(...)` calls,
+and bodies handed to `lax.scan` / `while_loop` / `fori_loop` / `cond` /
+`switch` / `map`. Reachability propagates through same-module calls by name.
+
+Suppression is inline and auditable: a ``# lint: allow(RULE reason)``
+comment on the flagged line or the line directly above waives exactly that
+rule at that site (e.g. the engine's trace-time compile counter, which is
+deliberate and pinned by the zero-recompile gates).
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+
+from repro.analysis.findings import Finding
+
+RULES = {
+    "LT001": "numpy call on a traced argument in jitted code",
+    "LT002": "host sync (.item()/float()) in jitted code",
+    "LT003": "rng threaded into an infer* function",
+    "LT004": "trace-time mutable state in jitted code",
+    "LT005": "jit wrapper missing donation on a cache/state argument",
+}
+
+DONATABLE_PARAMS = ("cache", "state", "opt_state")
+RNG_PARAM_NAMES = ("rng", "key", "prng_key", "rng_key", "rngs")
+LOOP_BODY_FUNS = {"scan", "while_loop", "fori_loop", "cond", "switch", "map",
+                  "associative_scan"}
+_ALLOW_RE = re.compile(r"#\s*lint:\s*allow\((LT\d{3})\b")
+
+
+def _dotted(node):
+    """'jax.jit'-style dotted name of a Name/Attribute chain, or ''. """
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _param_names(fn):
+    a = fn.args
+    names = [p.arg for p in a.posonlyargs + a.args]
+    return names, [p.arg for p in a.kwonlyargs]
+
+
+class _ModuleLint:
+    def __init__(self, tree, relpath, source_lines):
+        self.tree = tree
+        self.relpath = relpath
+        self.lines = source_lines
+        self.findings = []
+        # name → [FunctionDef] for every def anywhere in the module; names
+        # collide across scopes but for reachability that only over-approximates.
+        self.defs = {}
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.defs.setdefault(node.name, []).append(node)
+
+    # -- reporting ----------------------------------------------------------
+
+    def _allowed(self, rule, lineno):
+        for ln in (lineno, lineno - 1):
+            if 1 <= ln <= len(self.lines):
+                m = _ALLOW_RE.search(self.lines[ln - 1])
+                if m and m.group(1) == rule:
+                    return True
+        return False
+
+    def report(self, rule, node, message):
+        if not self._allowed(rule, node.lineno):
+            self.findings.append(Finding(
+                rule=rule, pass_name="lint",
+                where=f"{self.relpath}:{node.lineno}", message=message))
+
+    # -- jit roots & reachability ------------------------------------------
+
+    def _is_jit_decorator(self, dec):
+        name = _dotted(dec)
+        if name.endswith("jit"):
+            return True
+        if isinstance(dec, ast.Call):
+            callee = _dotted(dec.func)
+            if callee.endswith("jit"):
+                return True
+            if callee.endswith("partial") and dec.args:
+                return _dotted(dec.args[0]).endswith("jit")
+        return False
+
+    def _resolve_callable(self, node):
+        """A function-valued expression → (FunctionDef|Lambda|None)."""
+        if isinstance(node, ast.Lambda):
+            return node
+        if isinstance(node, ast.Name) and node.id in self.defs:
+            return self.defs[node.id][-1]
+        if isinstance(node, ast.Call):
+            factory = self._resolve_callable(node.func)
+            if isinstance(factory, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for sub in ast.walk(factory):
+                    if isinstance(sub, ast.Return) and sub.value is not None:
+                        return self._resolve_callable(sub.value)
+        return None
+
+    def jit_roots(self):
+        roots = []
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if any(self._is_jit_decorator(d) for d in node.decorator_list):
+                    roots.append(node)
+            elif isinstance(node, ast.Call):
+                callee = _dotted(node.func)
+                fn_args = []
+                if callee.endswith("jit") and node.args:
+                    fn_args = [node.args[0]]
+                elif callee.split(".")[-1] in LOOP_BODY_FUNS:
+                    fn_args = [a for a in node.args
+                               if isinstance(a, (ast.Lambda, ast.Name))]
+                for a in fn_args:
+                    fn = self._resolve_callable(a)
+                    if fn is not None:
+                        roots.append(fn)
+        return roots
+
+    def reachable(self):
+        seen, work = [], self.jit_roots()
+        while work:
+            fn = work.pop()
+            if any(fn is s for s in seen):
+                continue
+            seen.append(fn)
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Call):
+                    callee = _dotted(node.func)
+                    base = callee.split(".")[0]
+                    if base in self.defs and "." not in callee:
+                        work.append(self.defs[base][-1])
+        return seen
+
+    # -- rules --------------------------------------------------------------
+
+    def _static_params(self, fn):
+        """Params declared static in the function's jit decorator — those
+        are Python values at trace time, not tracers."""
+        static = set()
+        pos, _ = ([p.arg for p in fn.args.args], None) \
+            if not isinstance(fn, ast.Lambda) else ([], None)
+        for dec in getattr(fn, "decorator_list", []):
+            if not (isinstance(dec, ast.Call) and self._is_jit_decorator(dec)):
+                continue
+            for kw in dec.keywords:
+                if kw.arg not in ("static_argnames", "static_argnums"):
+                    continue
+                try:
+                    val = ast.literal_eval(kw.value)
+                except (ValueError, SyntaxError):
+                    continue
+                vals = (val,) if isinstance(val, (str, int)) else tuple(val)
+                for v in vals:
+                    if isinstance(v, str):
+                        static.add(v)
+                    elif isinstance(v, int) and v < len(pos):
+                        static.add(pos[v])
+        return static
+
+    def check_function(self, fn):
+        if isinstance(fn, ast.Lambda):
+            params = {p.arg for p in fn.args.args}
+            body_nodes = list(ast.walk(fn.body))
+        else:
+            pos, kwo = _param_names(fn)
+            params = (set(pos) | set(kwo)) - {"self"} - self._static_params(fn)
+            body_nodes = [n for stmt in fn.body for n in ast.walk(stmt)]
+        for node in body_nodes:
+            # Nested defs are separate reachability targets; don't re-lint
+            # their bodies against the OUTER function's params.
+            if isinstance(node, ast.Call):
+                callee = _dotted(node.func)
+                if callee.startswith(("np.", "numpy.")):
+                    traced = [a.id for a in node.args
+                              if isinstance(a, ast.Name) and a.id in params]
+                    if traced:
+                        self.report("LT001", node,
+                                    f"`{callee}({traced[0]}, ...)` applies "
+                                    "numpy to a traced argument inside "
+                                    "jit-reachable code")
+                if callee in ("float", "int", "bool") and node.args:
+                    a = node.args[0]
+                    if isinstance(a, ast.Name) and a.id in params:
+                        self.report("LT002", node,
+                                    f"`{callee}({a.id})` forces a host sync "
+                                    "on a traced argument in jitted code")
+                if (isinstance(node.func, ast.Attribute)
+                        and node.func.attr in ("item", "tolist")):
+                    self.report("LT002", node,
+                                f"`.{node.func.attr}()` forces a host sync "
+                                "inside jit-reachable code")
+            elif isinstance(node, (ast.Assign, ast.AugAssign)):
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                for t in targets:
+                    if (isinstance(t, ast.Attribute)
+                            and isinstance(t.value, ast.Name)
+                            and t.value.id == "self"):
+                        self.report("LT004", node,
+                                    f"assignment to `self.{t.attr}` inside "
+                                    "jit-reachable code runs at trace time, "
+                                    "not per call")
+            elif isinstance(node, (ast.Global, ast.Nonlocal)):
+                self.report("LT004", node,
+                            "global/nonlocal mutation inside jit-reachable "
+                            "code runs at trace time, not per call")
+
+    def check_infer_rng(self):
+        for fns in self.defs.values():
+            for fn in fns:
+                if not fn.name.lstrip("_").startswith("infer"):
+                    continue
+                pos, kwo = _param_names(fn)
+                for p in pos + kwo:
+                    if p in RNG_PARAM_NAMES:
+                        self.report("LT003", fn,
+                                    f"`{fn.name}` takes rng parameter "
+                                    f"`{p}` — infer paths are deterministic "
+                                    "by contract")
+                for node in ast.walk(fn):
+                    if isinstance(node, ast.Call):
+                        callee = _dotted(node.func)
+                        if (callee.startswith(("jax.random.", "random."))
+                                and not callee.startswith("random.Random")):
+                            self.report("LT003", node,
+                                        f"`{callee}` sampled inside "
+                                        f"`{fn.name}` — infer paths are "
+                                        "deterministic by contract")
+
+    def check_jit_donation(self):
+        for node in ast.walk(self.tree):
+            if not (isinstance(node, ast.Call)
+                    and _dotted(node.func).endswith("jit") and node.args):
+                continue
+            fn = self._resolve_callable(node.args[0])
+            if fn is None:
+                continue
+            if isinstance(fn, ast.Lambda):
+                pos = [p.arg for p in fn.args.args]
+            else:
+                pos, _ = _param_names(fn)
+            want = [i for i, p in enumerate(pos) if p in DONATABLE_PARAMS]
+            if not want:
+                continue
+            donate_kw = next((kw.value for kw in node.keywords
+                              if kw.arg in ("donate_argnums", "donate_argnames")),
+                             None)
+            if donate_kw is None:
+                self.report("LT005", node,
+                            f"jit of `{getattr(fn, 'name', '<lambda>')}` "
+                            f"does not donate `{pos[want[0]]}` (argnum "
+                            f"{want[0]}) — serving convention donates "
+                            "cache/state buffers")
+                continue
+            try:
+                declared = ast.literal_eval(donate_kw)
+            except (ValueError, SyntaxError):
+                continue   # dynamic expression — out of static reach
+            declared = ({declared} if isinstance(declared, int)
+                        else set(declared) if isinstance(declared, (tuple, list))
+                        else None)
+            if declared is None:
+                continue
+            for i in want:
+                if i not in declared and pos[i] not in declared:
+                    self.report("LT005", node,
+                                f"jit donates {sorted(declared)} but not "
+                                f"`{pos[i]}` (argnum {i})")
+
+    def run(self):
+        for fn in self.reachable():
+            self.check_function(fn)
+        self.check_infer_rng()
+        self.check_jit_donation()
+        return self.findings
+
+
+def lint_source(source: str, relpath: str):
+    tree = ast.parse(source)
+    return _ModuleLint(tree, relpath, source.splitlines()).run()
+
+
+def lint_file(path: str, root: str = None):
+    with open(path) as fh:
+        source = fh.read()
+    rel = os.path.relpath(path, root) if root else path
+    return lint_source(source, rel)
+
+
+def run(root=None):
+    """Lint every module under src/repro → (findings, n_files)."""
+    if root is None:
+        import repro
+        root = os.path.dirname(os.path.dirname(
+            os.path.abspath(repro.__file__)))
+    findings, n = [], 0
+    for dirpath, dirnames, filenames in os.walk(os.path.join(root, "repro")):
+        dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+        for fname in sorted(filenames):
+            if fname.endswith(".py"):
+                findings += lint_file(os.path.join(dirpath, fname), root)
+                n += 1
+    return findings, n

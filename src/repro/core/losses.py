@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def squared_coeff_variation(x, eps=1e-9):
@@ -38,7 +39,9 @@ def importance_loss(probs, alpha):
 
 
 def _normal_cdf(x):
-    return 0.5 * (1.0 + jax.lax.erf(x / jnp.sqrt(2.0)))
+    # float32 constant, not the weak-typed `jnp.sqrt(2.0)` — weak scalars
+    # escaping a function boundary trip the serving audit's JX003 rule.
+    return 0.5 * (1.0 + jax.lax.erf(x / np.sqrt(2.0, dtype=np.float32)))
 
 
 def smooth_top1_prob(clean_logits, noise_std=1.0):
@@ -60,7 +63,9 @@ def smooth_top1_prob(clean_logits, noise_std=1.0):
     # margins; the CDF saturates beyond ~±6σ anyway.
     margin = jnp.clip(jnp.nan_to_num(margin, posinf=30.0, neginf=-30.0),
                       -30.0, 30.0)
-    return _normal_cdf(margin / jnp.maximum(noise_std, 1e-6))
+    noise = jnp.maximum(jnp.asarray(noise_std, jnp.float32),
+                        np.float32(1e-6))  # non-weak floor (audit JX003)
+    return _normal_cdf(margin / noise)
 
 
 def load_loss(clean_logits, alpha, noise_std=1.0):

@@ -45,7 +45,11 @@ def binarize(x, scale_axis=None):
     same dtype as x (use `.astype(jnp.int8)` for storage).
     """
     scale = jnp.mean(jnp.abs(x), axis=scale_axis, keepdims=scale_axis is not None)
-    b = jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+    # Non-weak branch values: `jnp.where(x, 1.0, -1.0)` yields a WEAK-typed
+    # array (`.astype(x.dtype)` preserves weakness), and weak values crossing
+    # a jit boundary are a retrace hazard the serving audit (JX003) rejects.
+    one = jnp.ones((), x.dtype)
+    b = jnp.where(x >= 0, one, -one)
     return b, scale.astype(x.dtype)
 
 
@@ -70,7 +74,8 @@ def po2_quantize(w, p_min=P_MIN, p_max=P_MAX):
     sign ∈ {-1,+1} (zeros get +1 and P=p_min, i.e. the smallest magnitude —
     DeepShift-PS has no exact-zero representation and no scaling factor).
     """
-    sign = jnp.where(w < 0, -1.0, 1.0).astype(w.dtype)
+    one = jnp.ones((), w.dtype)        # non-weak branches (see binarize)
+    sign = jnp.where(w < 0, -one, one)
     mag = jnp.maximum(jnp.abs(w.astype(jnp.float32)), 2.0 ** (p_min - 1))
     p = jnp.clip(jnp.round(jnp.log2(mag)), p_min, p_max).astype(jnp.int32)
     return sign, p

@@ -48,6 +48,19 @@ def set_default_impl(impl: str):
 from repro.kernels.tpu_compat import pad_to_multiple as _pad_to
 
 
+def sublane_block(m: int, cap: int) -> int:
+    """Shape-adapted M-block: the kernel's block size, shrunk to the
+    sublane-aligned (multiple-of-8) cover of a small M. Single source of
+    truth for the wrappers below AND repro.analysis.kernel_contracts (the
+    contract table must model exactly the block geometry the wrappers pick)."""
+    return min(cap, -(-m // 8) * 8)
+
+
+def lane_block(n: int, cap: int) -> int:
+    """Shape-adapted N-block: lane-aligned (multiple-of-128) cover of N."""
+    return min(cap, -(-n // 128) * 128)
+
+
 # ---------------------------------------------------------------------------
 # shift_matmul: y = x @ (s * 2^P), packed int8 weights
 # ---------------------------------------------------------------------------
@@ -67,7 +80,7 @@ def _shift_matmul_fwd_impl(x, w_packed, impl):
         y = _ref.shift_matmul_ref(x2, w_packed)
     else:
         m = x2.shape[0]
-        bm = min(_shiftmm.BM, -(-m // 8) * 8)  # sublane-aligned (multiple of 8)
+        bm = sublane_block(m, _shiftmm.BM)
         y = _shiftmm.shift_matmul_pallas(
             x2, w_packed, bm=bm, interpret=(impl == "interpret"))
     return y.reshape(*lead, -1)
@@ -103,8 +116,8 @@ def _add_matmul_fwd_impl(x, b, impl):
         return _ref.add_matmul_ref(x, b)
     _, m, _ = x.shape
     n = b.shape[-1]
-    bm = min(_addmm.BM, -(-m // 8) * 8)      # sublane-aligned
-    bn = min(_addmm.BN, -(-n // 128) * 128)  # lane-aligned
+    bm = sublane_block(m, _addmm.BM)
+    bn = lane_block(n, _addmm.BN)
     return _addmm.add_matmul_pallas(x, b, bm=bm, bn=bn,
                                     interpret=(impl == "interpret"))
 
@@ -137,8 +150,8 @@ def add_matmul_bitpacked(x, packed, impl=None):
         return _ref.add_matmul_ref(x, b)
     _, m, _ = x.shape
     n = packed.shape[-1]
-    bm = min(_pk.BM, -(-m // 8) * 8)
-    bn = min(_pk.BN, -(-n // 128) * 128)
+    bm = sublane_block(m, _pk.BM)
+    bn = lane_block(n, _pk.BN)
     return _pk.add_matmul_packed_pallas(x, packed, bm=bm, bn=bn,
                                         interpret=(impl == "interpret"))
 

@@ -36,6 +36,7 @@ from repro.configs import shapes as shp
 from repro.configs.base import TrainConfig
 from repro.configs.registry import get_config, list_archs
 from repro.distributed import sharding as shard_lib
+from repro.analysis import ir
 from repro.launch import hlo_analysis
 from repro.launch.mesh import make_production_mesh
 from repro.nn.model import LanguageModel
@@ -218,9 +219,7 @@ def lower_cell(arch, shape_name, mesh_kind, policy=None, n_micro=None,
         t_compile = time.time() - t0
 
     mem = compiled.memory_analysis()
-    xla_cost = compiled.cost_analysis() or {}
-    if isinstance(xla_cost, list):        # jax<=0.4.x: entry per computation
-        xla_cost = xla_cost[0] if xla_cost else {}
+    xla_cost = ir.xla_cost_dict(compiled)
     hlo_cost = hlo_analysis.analyze(compiled.as_text())
 
     tokens = spec.global_batch * (spec.seq_len if spec.kind != "decode" else 1)

@@ -29,113 +29,31 @@ emits (lax.scan) has this form.
 Shapes come from a global name→type symbol table built from instruction
 definitions and computation signatures, so operand sizes resolve across
 regions. Post-SPMD HLO is the per-device program: all numbers are per-chip.
+
+The HLO-text parsing layer (shape/instruction/computation grammar, the
+name→type symbol table, the jax cost_analysis list-vs-dict compat) lives in
+`repro.analysis.ir` and is shared with the serving-contract static analyzer
+(`repro.analysis`); this module keeps only the roofline-specific cost model
+(trip counts, dot/conv flops, the write-once byte model).
 """
 from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, List, Optional, Tuple
+from typing import Dict
 
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
-    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
-    "c128": 16, "e4m3": 1, "e5m2": 1, "f8e4m3fn": 1, "f8e5m2": 1,
-}
+# Shared HLO grammar — re-exported so existing consumers (tests, notebooks)
+# keep importing them from here.
+from repro.analysis.ir import (Computation, Instr, nbytes as _nbytes,  # noqa: F401
+                               operand_names as _operand_names,
+                               parse_hlo, parse_shapes as _parse_shapes,
+                               symbol_table as _symbol_table,
+                               xla_cost_dict, CALLS_RE as _CALLS_RE)
 
-_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
-_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
-_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\((.*?)\)\s*->")
-_CALLS_RE = re.compile(r"(?:calls|condition|body|to_apply)=%?([\w\.\-]+)")
 _CONST_RE = re.compile(r"constant\((\d+)\)")
 
 COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                   "collective-permute")
-
-
-def _parse_shapes(type_str) -> List[Tuple[str, Tuple[int, ...]]]:
-    out = []
-    for dt, dims in _SHAPE_RE.findall(type_str):
-        if dt not in _DTYPE_BYTES:
-            continue
-        shape = tuple(int(d) for d in dims.split(",") if d) if dims else ()
-        out.append((dt, shape))
-    return out
-
-
-def _nbytes(type_str) -> int:
-    total = 0
-    for dt, shape in _parse_shapes(type_str):
-        n = 1
-        for d in shape:
-            n *= d
-        total += n * _DTYPE_BYTES[dt]
-    return total
-
-
-@dataclasses.dataclass
-class Instr:
-    name: str
-    result_type: str
-    op: str
-    rest: str       # raw tail of the line (operands + attrs)
-    line: str
-
-
-@dataclasses.dataclass
-class Computation:
-    name: str
-    instrs: List[Instr]
-    param_types: Dict[str, str]
-
-
-def parse_hlo(text: str) -> Dict[str, Computation]:
-    comps: Dict[str, Computation] = {}
-    cur: Optional[Computation] = None
-    for line in text.splitlines():
-        hdr = _COMP_HDR_RE.match(line.strip()) if "{" in line and "->" in line else None
-        if hdr and not line.strip().startswith("%constant"):
-            params = {}
-            for p in hdr.group(2).split(","):
-                p = p.strip()
-                if ":" in p:
-                    pname, ptype = p.split(":", 1)
-                    params[pname.strip().lstrip("%")] = ptype.strip()
-            cur = Computation(hdr.group(1), [], params)
-            comps[cur.name] = cur
-            continue
-        m = _INSTR_RE.match(line)
-        if m and cur is not None:
-            cur.instrs.append(Instr(m.group(1), m.group(2), m.group(3),
-                                    m.group(4), line))
-    return comps
-
-
-def _symbol_table(comps) -> Dict[str, str]:
-    table = {}
-    for c in comps.values():
-        for name, t in c.param_types.items():
-            table[name] = t
-        for ins in c.instrs:
-            table[ins.name] = ins.result_type
-    return table
-
-
-def _operand_names(rest: str) -> List[str]:
-    # operands are the leading %refs before the closing paren of the op call
-    depth = 0
-    out = []
-    token = ""
-    for ch in rest:
-        if ch == "(":
-            depth += 1
-        if ch == ")":
-            if depth == 0:
-                break
-            depth -= 1
-        token += ch
-    for ref in re.findall(r"%([\w\.\-]+)", token):
-        out.append(ref)
-    return out
 
 
 def _dot_flops(ins: Instr, table) -> float:

@@ -279,7 +279,12 @@ class Attention:
                 vf.astype(jnp.float32), causal=self.causal, chunk=min(128, n),
                 train=False, feature=self.feature, return_state=True)
             out = out.astype(x.dtype)
-            new_cache = dict(state)
+            # Accumulate into the caller's carry instead of replacing it: the
+            # recurrent state is additive, so this is exact for the fresh
+            # (zero) cache and correct for a warm-carry continuation — and it
+            # consumes the donated cache buffers (serving audit JX005)
+            # instead of allocating a fresh carry next to them.
+            new_cache = {name: cache[name] + state[name] for name in state}
             if "conv" in cache:
                 new_cache["conv"] = L.trailing_window(
                     vraw, self.dwconv.width - 1, cache["conv"].dtype)
@@ -517,12 +522,15 @@ class MLAttention:
         m = self.m
         q, k, v, c_kv, k_rope = self._assemble_qkv(params, x, positions)
         if self.mode in ("linear", "binary_linear"):
-            out, new_cache = la.binary_linear_attention(
+            out, state = la.binary_linear_attention(
                 q.astype(jnp.float32), k.astype(jnp.float32),
                 v.astype(jnp.float32), causal=self.cfg.causal,
                 chunk=min(128, n), train=False, feature=self.feature,
                 return_state=True)
             out = out.astype(x.dtype)
+            # Additive carry: accumulate into the donated cache (see the
+            # GQA prefill above — exact for zeros, JX005-consumable).
+            new_cache = {name: cache[name] + state[name] for name in state}
         else:
             out = softmax_attention(q, k, v, causal=self.cfg.causal,
                                     chunk=min(512, n))

@@ -13,8 +13,10 @@ end-to-end, not per-layer):
   (default {1, 8, 32} — the benchmark/CI set, surfaced as `engine.buckets`),
   so jit compiles exactly one program per bucket
   and steady-state traffic never retraces. `trace_count` exposes the compile
-  counter the no-recompilation test asserts on. The padded image buffer is
-  engine-owned scratch and is donated to the jit'd forward on accelerators.
+  counter the no-recompilation test asserts on. The image buffer is NOT
+  donated: (B, H, W, C) inputs can never alias the (B, n_classes) logits, so
+  donation was pure dead weight (`engine.donate_argnums`, audited by
+  repro.analysis' JX005 rule, records the intent).
 
 - **Deployment freeze** (`freeze=True`, the default): the engine builds a
   `core.deploy.DeployPlan` at construction — every shift weight decoded or
@@ -120,9 +122,13 @@ class BucketedViTEngine:
         # '+=' on the counters would drop updates under concurrent infer().
         self._counter_lock = threading.Lock()
 
-        # The padded buffer is engine-owned scratch — donate it where the
-        # backend supports donation (CPU donation only warns, so gate it).
-        self._donates = jax.default_backend() in ("tpu", "gpu")
+        # Donation intent, surfaced for the serving-contract audit (JX005):
+        # the image buffer is NEVER donatable — (B, H, W, C) inputs cannot
+        # alias the (B, n_classes) logits, so a donate_argnums on it is dead
+        # weight XLA warns about ("donated buffers were not usable") and it
+        # forced a defensive copy of full-bucket chunks in infer(). Keep ()
+        # unless a future output actually matches an input buffer.
+        self.donate_argnums = ()
         jit_kw = {}
         if mesh is not None:
             from repro.distributed import sharding as shd
@@ -144,12 +150,14 @@ class BucketedViTEngine:
             # Frozen params are closed over, not passed: they are constants
             # of the serving program, never retraced against.
             def fwd(images):
-                self.trace_count += 1   # runs at trace time, not at execution
+                # Runs at trace time, not at execution — the compile counter
+                # the no-recompilation gate asserts on.
+                self.trace_count += 1  # lint: allow(LT004 trace-time compile counter, guarded by gates)
                 return model.infer(run_params, images)
 
-            fwd_j = jax.jit(fwd, donate_argnums=(0,) if self._donates else (),
-                            **jit_kw)
-            self._call = fwd_j
+            self._fwd = fwd
+            self._call = jax.jit(fwd, donate_argnums=self.donate_argnums,
+                                 **jit_kw)
         else:
             self.plan = None
 
@@ -159,15 +167,15 @@ class BucketedViTEngine:
             # the no-freeze benchmark arm into a de-facto frozen one), and
             # a caller that swaps engine.params serves the new weights.
             def fwd(p, images):
-                self.trace_count += 1
+                self.trace_count += 1  # lint: allow(LT004 trace-time compile counter, guarded by gates)
                 return model.infer(p, images)
 
             if jit_kw:
                 from repro.distributed import sharding as shd
                 jit_kw["in_shardings"] = (shd.replicated(mesh),
                                           jit_kw["in_shardings"])
-            fwd_j = jax.jit(fwd, donate_argnums=(1,) if self._donates else (),
-                            **jit_kw)
+            self._fwd = fwd
+            fwd_j = jax.jit(fwd, **jit_kw)
             self._call = lambda images: fwd_j(self.params, images)
 
     def bucket_for(self, n: int) -> int:
@@ -208,11 +216,6 @@ class BucketedViTEngine:
             if take < bucket:
                 pad = jnp.zeros((bucket - take,) + chunk.shape[1:], chunk.dtype)
                 chunk = jnp.concatenate([chunk, pad], axis=0)
-            elif self._donates:
-                # A full-bucket chunk can alias the caller's array (a
-                # full-range slice is the same buffer) — donation would
-                # invalidate it, so hand jit an engine-owned copy instead.
-                chunk = jnp.copy(chunk)
             logits = self._call(chunk)
             outs.append(logits[:take])
             with self._counter_lock:

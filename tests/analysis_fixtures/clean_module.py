@@ -1,0 +1,19 @@
+"""A hazard-free module — the lint must report NOTHING here."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def clean_step(x):
+    return jnp.tanh(x) * 2.0
+
+
+def make_decode(model):
+    def decode(params, tok, cache):
+        return tok + 1, cache
+
+    return jax.jit(decode, donate_argnums=(2,))
+
+
+def infer_clean(params, x):
+    return clean_step(x)

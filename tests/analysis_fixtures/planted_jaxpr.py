@@ -1,0 +1,34 @@
+"""Planted jaxpr-audit violations — functions test_analysis.py traces with
+`jax.make_jaxpr` and feeds to `audit_closed_jaxpr`, asserting each reports
+exactly its planted rule.
+"""
+import jax
+import jax.numpy as jnp
+
+
+def callback_under_jit(x):       # JX001: debug print = host callback
+    jax.debug.print("x = {}", x)
+    return x * 2
+
+
+def weak_boundary(x):            # JX003: weak scalar escapes a pjit boundary
+
+    @jax.jit
+    def inner(v):
+        return jnp.where(v >= 0, 1.0, -1.0).astype(v.dtype)  # weak branches
+
+    return inner(x)
+
+
+def rng_in_infer(x):             # JX006: rng primitive on an infer path
+    key = jax.random.PRNGKey(0)
+    return x + jax.random.normal(key, x.shape)
+
+
+def float_scatter_add(x):        # JX007: nondeterministic float scatter-add
+    idx = jnp.zeros((x.shape[0],), jnp.int32)
+    return jnp.zeros((4,), x.dtype).at[idx].add(x)
+
+
+def f64_promotion(x):            # JX002 (trace under enable_x64)
+    return x.astype("float64") * 2.0

@@ -1,0 +1,58 @@
+"""Planted AST-lint violations — NEVER imported by runtime code.
+
+Each function below plants exactly one rule violation; test_analysis.py
+asserts the lint reports this file's violations and nothing else. The
+`allowed_counter` case plants an LT004 hit WITH an inline waiver, asserting
+the suppression mechanism works.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def numpy_on_traced(x):          # LT001
+    return jnp.sin(np.asarray(x))
+
+
+@jax.jit
+def host_sync_item(x):           # LT002 (.item())
+    return x.sum().item()
+
+
+@jax.jit
+def host_sync_float(x):          # LT002 (float(param))
+    return float(x) * 2.0
+
+
+def infer_with_rng(params, x, rng):   # LT003 (rng parameter on infer*)
+    return x + jax.random.normal(rng, x.shape)
+
+
+class StatefulModule:
+    def __init__(self):
+        self.calls = 0
+
+    def make_step(self):
+        @jax.jit
+        def step(x):             # LT004 (trace-time self mutation)
+            self.calls += 1
+            return x * 2
+
+        return step
+
+    def make_counted_step(self):
+        @jax.jit
+        def step(x):
+            # LT004 planted WITH a waiver — must NOT be reported:
+            self.calls += 1  # lint: allow(LT004 deliberate compile counter)
+            return x * 2
+
+        return step
+
+
+def decode_step_fn(params, tok, cache):
+    return tok, cache
+
+
+undonated = jax.jit(decode_step_fn)   # LT005 (cache param, no donation)
