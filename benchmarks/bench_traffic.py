@@ -33,14 +33,57 @@ from repro.serve.traffic import SCENARIOS
 
 def run(scenario="poisson", requests=300, seed=0, replicas=2, arm="auto",
         utilization=0.4, image_size=56, layers=4, d_model=128, impl=None,
-        verify_replay=True, verify_one_vs_n=True):
+        tune=None, verify_replay=True, verify_one_vs_n=True):
     cfg = ViTConfig(image_size=image_size, n_layers=layers, d_model=d_model,
                     d_ff=2 * d_model)
     return traffic_sweep(
         cfg, scenario=scenario, policies=("dense", "stage1", "shiftadd"),
         n_requests=requests, seed=seed, replicas=replicas, arm=arm,
-        utilization=utilization, impl=impl, verify_replay=verify_replay,
-        verify_one_vs_n=verify_one_vs_n)
+        utilization=utilization, impl=impl, tune=tune,
+        verify_replay=verify_replay, verify_one_vs_n=verify_one_vs_n)
+
+
+def pallas_arm(scenario="poisson", requests=300, seed=0, tune=None,
+               image_size=56, layers=4, d_model=128):
+    """Nested `pallas_arm` traffic record: the shiftadd arm served at
+    impl=pallas next to an impl=xla twin on the SAME trace geometry.
+
+    TPU: real kernels at the CLI geometry. Elsewhere: interpret-mode smoke
+    at bench_vit.SMOKE_CFG-scale traffic (40 requests, 16px, 2 layers) —
+    path proof only; check_vit_pallas.py skips the latency gate with the
+    carried reason.
+    """
+    import jax
+
+    backend = jax.default_backend()
+    if backend == "tpu":
+        mode, kernel_impl, skip_reason = "tpu", "pallas", None
+        geo = dict(image_size=image_size, layers=layers, d_model=d_model)
+        n_req = requests
+    else:
+        mode, kernel_impl = "interpret-smoke", "interpret"
+        skip_reason = (f"backend={backend}: Pallas kernels ran under the "
+                       "interpreter at reduced traffic geometry; timings "
+                       "are interpreter overhead, not kernel performance")
+        geo = dict(image_size=16, layers=2, d_model=32)
+        n_req = 40
+    cfg = ViTConfig(image_size=geo["image_size"], n_layers=geo["layers"],
+                    d_model=geo["d_model"], d_ff=2 * geo["d_model"])
+    common = dict(scenario=scenario, policies=("shiftadd",),
+                  n_requests=n_req, seed=seed, replicas=1, arm="thread",
+                  verify_replay=False, verify_one_vs_n=False)
+    rec_pallas = traffic_sweep(cfg, impl=kernel_impl, tune=tune, **common)
+    rec_xla = traffic_sweep(cfg, impl="xla", tune=None, **common)
+    return {
+        "mode": mode,
+        "backend": backend,
+        "impl": kernel_impl,
+        "tuned": tune is not None,
+        "skip_reason": skip_reason,
+        "geometry": dict(geo, requests=n_req),
+        "pallas": rec_pallas,
+        "xla": rec_xla,
+    }
 
 
 def main(rows=None):
@@ -66,19 +109,36 @@ def main(rows=None):
     ap.add_argument("--d-model", type=int, default=128)
     ap.add_argument("--impl", choices=["xla", "pallas", "interpret"],
                     default=None)
+    ap.add_argument("--tune", default=None, metavar="TUNE_kernels.json",
+                    help="persisted autotune table (launch/autotune.py "
+                         "output)")
+    ap.add_argument("--skip-pallas-arm", action="store_true",
+                    help="omit the nested impl=pallas traffic arm")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
     if args.out is None:
         args.out = os.path.join(os.path.dirname(__file__), "..",
                                 "BENCH_traffic.json")
-    if args.impl:
-        from repro.kernels import ops
-        ops.set_default_impl(args.impl)
+    # --impl threads explicitly through traffic_sweep → replicas → engines
+    # (never via ops.set_default_impl; satellite bugfix).
+    tune = None
+    if args.tune:
+        from repro.kernels import autotune
+        tune = autotune.load_table(args.tune)
+        if tune is None:
+            print(f"WARNING: could not load tune table {args.tune}; "
+                  f"serving with default block caps")
 
     rec = run(scenario=args.scenario, requests=args.requests, seed=args.seed,
               replicas=args.replicas, arm=args.arm,
               utilization=args.utilization, image_size=args.image_size,
-              layers=args.layers, d_model=args.d_model, impl=args.impl)
+              layers=args.layers, d_model=args.d_model, impl=args.impl,
+              tune=tune)
+    if not args.skip_pallas_arm:
+        rec["pallas_arm"] = pallas_arm(
+            scenario=args.scenario, requests=args.requests, seed=args.seed,
+            tune=tune, image_size=args.image_size, layers=args.layers,
+            d_model=args.d_model)
     with open(args.out, "w") as f:
         json.dump(rec, f, indent=2)
     for name, r in rec["policies"].items():
@@ -92,6 +152,13 @@ def main(rows=None):
               f"recompiles {r['recompiles_after_warmup']}")
     if "shiftadd_vs_dense_p99" in rec:
         print(f"shiftadd vs dense p99: {rec['shiftadd_vs_dense_p99']:.3f}x")
+    if "pallas_arm" in rec:
+        arm = rec["pallas_arm"]
+        p = arm["pallas"]["policies"]["shiftadd"]["latency"]
+        x = arm["xla"]["policies"]["shiftadd"]["latency"]
+        print(f"pallas arm [{arm['mode']}]: pallas p50 "
+              f"{p['p50_s'] * 1e3:.2f} ms vs xla p50 "
+              f"{x['p50_s'] * 1e3:.2f} ms (tuned={arm['tuned']})")
     print(f"wrote {os.path.abspath(args.out)}")
 
 

@@ -6,6 +6,13 @@ per-PR trajectory, next to BENCH_serve.json's LM numbers.
     PYTHONPATH=src python benchmarks/bench_vit.py --no-freeze   # A/B arm
     PYTHONPATH=src python benchmarks/bench_vit.py --breakdown   # per-component
     PYTHONPATH=src python benchmarks/bench_vit.py --impl interpret
+    PYTHONPATH=src python benchmarks/bench_vit.py --tune TUNE_kernels.json
+
+The record also carries a nested `pallas_arm`: a shiftadd-only sweep at
+impl=pallas (real kernels on TPU, interpret-mode smoke at reduced geometry
+elsewhere) next to an impl=xla twin at the same geometry, fed through the
+persisted autotune table when `--tune` is given. check_vit_pallas.py gates
+`pallas <= xla` per bucket on it (skip-with-reason off-TPU).
 
 One set of pretrained dense weights is pushed through `convert_from` at
 stage 0 (dense), stage 1 (binary-linear attention) and stage 2 (+ MoE of
@@ -38,6 +45,61 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 from repro.nn.vit import ViTConfig
 from repro.serve.vision import policy_sweep
 
+# Reduced geometry for the CPU interpret-mode smoke of the pallas arm: the
+# whole tuned-kernel path (table → DeployPlan → frozen engine → pallas_call
+# under the interpreter) at a size where interpreting every kernel stays
+# cheap. Timings from this geometry are NOT kernel timings.
+SMOKE_CFG = dict(image_size=16, patch_size=4, n_layers=2, d_model=32,
+                 n_heads=2, d_ff=64)
+SMOKE_BATCH, SMOKE_ITERS, SMOKE_BUCKETS = 4, 3, (1, 4)
+
+
+def pallas_arm(cfg=None, batch=32, iters=10, tune=None):
+    """The measured impl=pallas serving arm (nested under "pallas_arm" in
+    BENCH_vit.json) plus an impl=xla twin sweep at the SAME geometry — the
+    per-bucket pair check_vit_pallas.py gates `pallas <= xla` on.
+
+    mode "tpu": real Pallas kernels at the benchmark geometry, through the
+    persisted autotune table when one is given.
+    mode "interpret-smoke" (any non-TPU backend): interpreter-executed
+    kernels at SMOKE_CFG geometry — proves the serving path end to end, but
+    the latency gate must be skipped (check_vit_pallas.py prints the
+    carried skip_reason and exits 0).
+    """
+    import jax
+
+    backend = jax.default_backend()
+    if backend == "tpu":
+        mode, kernel_impl, skip_reason = "tpu", "pallas", None
+        arm_cfg = cfg or ViTConfig(image_size=56)
+        arm_batch, arm_iters, arm_buckets = batch, max(iters, 10), None
+    else:
+        mode, kernel_impl = "interpret-smoke", "interpret"
+        skip_reason = (f"backend={backend}: Pallas kernels ran under the "
+                       "interpreter at reduced geometry; timings are "
+                       "interpreter overhead, not kernel performance")
+        arm_cfg = ViTConfig(**SMOKE_CFG)
+        arm_batch, arm_iters, arm_buckets = (SMOKE_BATCH, SMOKE_ITERS,
+                                             SMOKE_BUCKETS)
+    kw = dict(batch=arm_batch, iters=arm_iters, buckets=arm_buckets,
+              policies=("shiftadd",), freeze=True)
+    rec_pallas = policy_sweep(arm_cfg, impl=kernel_impl, tune=tune, **kw)
+    rec_xla = policy_sweep(arm_cfg, impl="xla", tune=None, **kw)
+    return {
+        "mode": mode,
+        "backend": backend,
+        "impl": kernel_impl,
+        "tuned": tune is not None,
+        "skip_reason": skip_reason,
+        "geometry": {"image_size": arm_cfg.image_size,
+                     "n_layers": arm_cfg.n_layers,
+                     "d_model": arm_cfg.d_model,
+                     "batch": arm_batch, "iters": arm_iters,
+                     "buckets": rec_pallas.get("buckets")},
+        "pallas": rec_pallas,
+        "xla": rec_xla,
+    }
+
 
 def main(rows=None):
     if rows is not None:
@@ -62,6 +124,13 @@ def main(rows=None):
                     default=None,
                     help="force the kernel implementation (CI uses this to "
                          "exercise the interpret path)")
+    ap.add_argument("--tune", default=None, metavar="TUNE_kernels.json",
+                    help="persisted autotune table (launch/autotune.py "
+                         "output); tuned block caps feed every pallas/"
+                         "interpret kernel call, the pallas_arm included")
+    ap.add_argument("--skip-pallas-arm", action="store_true",
+                    help="omit the nested impl=pallas arm (it adds two "
+                         "extra sweeps)")
     ap.add_argument("--no-freeze", action="store_true",
                     help="serve the live params instead of the DeployPlan "
                          "(the A/B arm of the freeze benchmark)")
@@ -79,9 +148,16 @@ def main(rows=None):
         name = "BENCH_vit_freeze_ab.json" if args.ab_freeze else "BENCH_vit.json"
         args.out = os.path.join(os.path.dirname(__file__), "..", name)
 
-    if args.impl:
-        from repro.kernels import ops
-        ops.set_default_impl(args.impl)
+    # NOTE: --impl threads explicitly through policy_sweep → engine → kernel
+    # ops (never via ops.set_default_impl — the old process-global override
+    # leaked into every later engine in the process; satellite bugfix).
+    tune = None
+    if args.tune:
+        from repro.kernels import autotune
+        tune = autotune.load_table(args.tune)
+        if tune is None:
+            print(f"WARNING: could not load tune table {args.tune}; "
+                  f"serving with default block caps")
 
     cfg = ViTConfig(image_size=args.image_size, n_layers=args.layers,
                     d_model=args.d_model, d_ff=2 * args.d_model)
@@ -99,7 +175,10 @@ def main(rows=None):
         return
     rec = policy_sweep(cfg, batch=args.batch, iters=args.iters,
                        freeze=not args.no_freeze, impl=args.impl,
-                       breakdown=args.breakdown)
+                       tune=tune, breakdown=args.breakdown)
+    if not args.skip_pallas_arm:
+        rec["pallas_arm"] = pallas_arm(cfg, batch=args.batch,
+                                       iters=args.iters, tune=tune)
     with open(args.out, "w") as f:
         json.dump(rec, f, indent=2)
 
@@ -146,6 +225,13 @@ def main(rows=None):
     if "shiftadd_vs_dense_latency" in rec:
         print(f"shiftadd vs dense latency: "
               f"{rec['shiftadd_vs_dense_latency']:.3f}x (frozen={rec['frozen']})")
+    if "pallas_arm" in rec:
+        arm = rec["pallas_arm"]
+        p = arm["pallas"]["policies"]["shiftadd"]["latency"]
+        x = arm["xla"]["policies"]["shiftadd"]["latency"]
+        print(f"pallas arm [{arm['mode']}]: pallas p50 "
+              f"{p['p50_s'] * 1e3:.2f} ms vs xla p50 "
+              f"{x['p50_s'] * 1e3:.2f} ms (tuned={arm['tuned']})")
     print(f"wrote {os.path.abspath(args.out)}")
 
 

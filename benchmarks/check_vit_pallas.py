@@ -1,0 +1,134 @@
+"""CI gate for the measured impl=pallas serving arm (vit-serve/vit-traffic).
+
+    python benchmarks/check_vit_pallas.py BENCH_vit.json [BENCH_traffic.json]
+
+Reads the nested `pallas_arm` record bench_vit.py / bench_traffic.py attach
+(an impl=pallas sweep next to an impl=xla twin at the same geometry, fed
+through the persisted autotune table) and gates, mirroring how
+check_vit_freeze.py gates frozen <= unfrozen:
+
+- FAILS (exit 1) if a record has NO `pallas_arm` — a benchmark that stopped
+  producing the arm must not pass by omission;
+- FAILS if any pallas-arm engine recompiled after warmup;
+- on a real-kernel arm (mode == "tpu"): FAILS if the pallas arm is slower
+  than the xla twin beyond NOISE_MARGIN — per bucket, on the
+  `bucket_latency` series for BENCH_vit.json, on per-request latency for
+  BENCH_traffic.json — compared at the percentile the sample count supports
+  (serve.metrics.gate_percentile: p99 needs n >= 100, p95 n >= 20, else
+  p50; nearest-rank observed samples, never interpolated);
+- on an interpret-smoke arm (any non-TPU backend): the latency gate is
+  SKIPPED WITH THE CARRIED REASON printed — interpreter timings say nothing
+  about kernel performance — and the check exits 0 provided the arm exists,
+  ran the shiftadd policy, and recompiled nothing. A skip is always loud,
+  never a silent pass.
+
+Harness mode (`benchmarks/run.py` → main(rows)): builds the interpret-smoke
+arm in-process and runs the same gate logic over it, so the gate's own code
+path is exercised on CPU-only runners every harness run.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.serve.metrics import gate_percentile
+
+NOISE_MARGIN = 1.05
+
+
+def _arm_failures(arm, label, failures, skips):
+    """Gate one nested pallas_arm record; append to failures/skips."""
+    if not isinstance(arm, dict) or "pallas" not in arm:
+        failures.append(f"{label}: no pallas_arm record — the benchmark "
+                        f"did not produce the impl=pallas arm")
+        return
+    for side in ("pallas", "xla"):
+        for name, r in arm[side].get("policies", {}).items():
+            if r.get("recompiles_after_warmup", 1) > 0:
+                failures.append(
+                    f"{label}/{side}/{name}: recompiled after warmup "
+                    f"({r.get('recompiles_after_warmup')} extra traces)")
+    p_pol = arm["pallas"].get("policies", {}).get("shiftadd")
+    x_pol = arm["xla"].get("policies", {}).get("shiftadd")
+    if p_pol is None or x_pol is None:
+        failures.append(f"{label}: pallas_arm is missing the shiftadd "
+                        f"policy on one side")
+        return
+    if arm.get("mode") != "tpu":
+        skips.append(f"{label}: latency gate skipped — "
+                     f"{arm.get('skip_reason') or 'non-TPU backend'}")
+        return
+
+    # Real kernels: pallas must be at-or-below the xla twin. Per bucket
+    # when the record carries the per-bucket series (BENCH_vit.json),
+    # else on the arm's request/batch latency (BENCH_traffic.json).
+    p_buckets = p_pol.get("bucket_latency") or {}
+    x_buckets = x_pol.get("bucket_latency") or {}
+    pairs = ([(f"bucket {b}", p_buckets[b], x_buckets[b])
+              for b in sorted(p_buckets, key=int) if b in x_buckets]
+             or [("latency", p_pol["latency"], x_pol["latency"])])
+    for where, p_lat, x_lat in pairs:
+        key = gate_percentile(min(p_lat["n"], x_lat["n"]))
+        if x_lat[key] <= 0:
+            failures.append(f"{label}/{where}: xla twin reports "
+                            f"non-positive {key}")
+            continue
+        ratio = p_lat[key] / x_lat[key]
+        print(f"{label}/{where}: pallas {p_lat[key] * 1e3:.3f} ms vs xla "
+              f"{x_lat[key] * 1e3:.3f} ms at {key} "
+              f"(n={min(p_lat['n'], x_lat['n'])}, {ratio:.3f}x, "
+              f"tuned={arm.get('tuned')})")
+        if ratio > NOISE_MARGIN:
+            failures.append(
+                f"{label}/{where}: pallas is slower than the xla twin at "
+                f"{key} ({ratio:.3f}x > {NOISE_MARGIN}x noise margin)")
+
+
+def check_records(records):
+    """records: {label: BENCH record dict}. Returns exit code."""
+    failures, skips = [], []
+    for label, rec in records.items():
+        _arm_failures(rec.get("pallas_arm"), label, failures, skips)
+    for s in skips:
+        print(f"SKIP: {s}")
+    for f in failures:
+        print(f"FAIL: {f}")
+    if failures:
+        return 1
+    print("pallas gate OK" + (" (latency gate skipped off-TPU)"
+                              if skips else ""))
+    return 0
+
+
+def main(rows=None):
+    if rows is not None:
+        # benchmarks/run.py harness mode: build the interpret-smoke arm
+        # in-process and push it through the real gate path.
+        import time
+
+        from benchmarks import bench_vit
+
+        t0 = time.time()
+        arm = bench_vit.pallas_arm(tune=None)
+        code = check_records({"smoke": {"pallas_arm": arm}})
+        p50 = arm["pallas"]["policies"]["shiftadd"]["latency"]["p50_s"]
+        rows.append(("check_vit_pallas", (time.time() - t0) * 1e6,
+                     f"mode={arm['mode']};gate_exit={code};"
+                     f"pallas_p50_us={p50 * 1e6:.0f}"))
+        if code != 0:
+            raise SystemExit("check_vit_pallas harness gate failed")
+        return
+
+    argv = sys.argv
+    if len(argv) < 2:
+        print(__doc__)
+        return 2
+    records = {os.path.basename(p): json.load(open(p)) for p in argv[1:]}
+    return check_records(records)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

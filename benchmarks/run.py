@@ -12,6 +12,7 @@ is produced separately from the dry-run artifacts by benchmarks/roofline.py.
   bench_sensitivity  — paper Tab. 2 (trains reduced ViTs; slowest)
   bench_llloss       — paper Tab. 7 (LL-loss ablation; trains routers)
   check_analysis     — serving-contract static analyzer (pass wall-times)
+  check_vit_pallas   — impl=pallas arm gate (interpret-smoke on CPU)
 """
 from __future__ import annotations
 
@@ -25,12 +26,13 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 def main() -> None:
     from benchmarks import (bench_breakdown, bench_energy, bench_kernels,
                             bench_llloss, bench_sensitivity, bench_serve,
-                            bench_traffic, bench_vit, check_analysis)
+                            bench_traffic, bench_vit, check_analysis,
+                            check_vit_pallas)
 
     rows = []
     for mod in (bench_kernels, bench_breakdown, bench_energy, bench_vit,
                 bench_serve, bench_traffic, bench_sensitivity, bench_llloss,
-                check_analysis):
+                check_analysis, check_vit_pallas):
         t0 = time.time()
         mod.main(rows)
         rows.append((f"_{mod.__name__.split('.')[-1]}_wall",

@@ -86,9 +86,14 @@ def _finish(kernel, site, bucket, geometry, blocks, grid, padded, vmem,
 # ---------------------------------------------------------------------------
 
 def matmul_cell(kernel, site, bucket, g, m, k, n, *, w_bytes, adapt_bn,
-                packed_k=False):
+                packed_k=False, blocks=None):
     """shift_matmul / add_matmul / add_matmul_packed share one dataflow:
-    grid (G, M/bm, N/bn, K/bk) with an (bm, bn) f32 VMEM accumulator."""
+    grid (G, M/bm, N/bn, K/bk) with an (bm, bn) f32 VMEM accumulator.
+
+    blocks=None models the wrappers' UNTUNED defaults; a dict of tuned caps
+    (bm/bn/bk or bk8) replays exactly the resolution `kernels.ops` applies to
+    a TuneTable hit (`sublane_block`/`lane_block`/`kdim_block` covers), so
+    the autotuner's cost oracle and the launched grid can never diverge."""
     from repro.kernels import add_matmul as _addmm
     from repro.kernels import add_matmul_packed as _pk
     from repro.kernels import ops
@@ -96,9 +101,18 @@ def matmul_cell(kernel, site, bucket, g, m, k, n, *, w_bytes, adapt_bn,
 
     mod = {"shift_matmul": _shiftmm, "add_matmul": _addmm,
            "add_matmul_packed": _pk}[kernel]
-    bm = ops.sublane_block(m, mod.BM)
-    bn = ops.lane_block(n, mod.BN) if adapt_bn else mod.BN
-    bk = mod.BK8 * 8 if packed_k else mod.BK
+    if blocks is None:
+        bm = ops.sublane_block(m, mod.BM)
+        bn = ops.lane_block(n, mod.BN) if adapt_bn else mod.BN
+        bk = mod.BK8 * 8 if packed_k else mod.BK
+    else:
+        bm = ops.sublane_block(m, blocks.get("bm", mod.BM))
+        bn = ops.lane_block(n, blocks.get("bn", mod.BN))
+        if packed_k:
+            bk = 8 * ops.packed_kdim_block(-(-k // 8),
+                                           blocks.get("bk8", mod.BK8))
+        else:
+            bk = ops.kdim_block(k, blocks.get("bk", mod.BK))
     mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
     grid_mnk = (mp // bm, np_ // bn, kp // bk)
     grid = grid_mnk if g == 1 and kernel == "shift_matmul" else (g,) + grid_mnk
@@ -118,24 +132,41 @@ def matmul_cell(kernel, site, bucket, g, m, k, n, *, w_bytes, adapt_bn,
                    PEAK_OPS_INT8)
 
 
-def linear_attention_cell(bucket, g, n, dk, dv):
-    """Chunked causal kernel: grid (G, N/chunk); carry (dk, dv) in VMEM."""
+def linear_attention_cell(bucket, g, n, dk, dv, *, blocks=None):
+    """Chunked causal kernel: grid (G, N/chunk); carry (dk, dv) in VMEM.
+
+    blocks={"chunk": c} overrides the VMEM-residency chunk the same way a
+    TuneTable hit does in `ops.binary_linear_attention_fused`.
+
+    The MAC law counts every contraction the kernel executes per chunk — the
+    inter-chunk terms bq@KV and bkᵀ@v AND the intra-chunk causal pair
+    s = bq@bkᵀ, s@v (each chunk² · head-dim). The old law modeled only the
+    inter-chunk 4·n·dk·dv terms, so at the 196-token serving geometry
+    (chunk = n) it under-counted the executed MACs by more than half and the
+    pad-waste the tuner minimizes drifted from what the wrapper launches."""
     from repro.kernels import linear_attention as _linattn
 
-    chunk = min(_linattn.CHUNK, n)
+    chunk = min((blocks or {}).get("chunk", _linattn.CHUNK), n)
     dkp, dvp = _ceil_to(dk, 128), _ceil_to(dv, 128)
     np_ = _ceil_to(n, chunk)
     grid = (g, np_ // chunk)
     vmem = (2 * (2 * chunk * dkp * F32 + chunk * dvp * F32   # q, k | v
                  + chunk * dvp * F32)                        # out
-            + (dkp * dvp + dkp + dvp) * F32)                 # carry scratch
+            + (dkp * dvp + dkp + dvp) * F32                  # carry scratch
+            + chunk * chunk * F32)                           # intra-chunk S
     hbm = g * ((2 * np_ * dkp + 2 * np_ * dvp) * F32)
-    flops = lambda nn, a, b: 4.0 * g * nn * a * b            # KᵀV + Q(KᵀV)
+
+    def flops(nn, c, a, b):
+        # 2 flops/MAC × (bq@KV + bkᵀ@v: nn·a·b each; bq@bkᵀ: nn·c·a; s@v:
+        # nn·c·b) summed over the nn/c chunk steps.
+        return 2.0 * g * (2.0 * nn * a * b + nn * c * (a + b))
+
     return _finish("linear_attention", "causal_attn", bucket,
                    {"g": g, "n": n, "dk": dk, "dv": dv},
                    {"chunk": chunk},
                    grid, {"n": np_, "dk": dkp, "dv": dvp},
-                   vmem, flops(np_, dkp, dvp), flops(n, dk, dv), hbm,
+                   vmem, flops(np_, chunk, dkp, dvp),
+                   flops(n, min(chunk, n), dk, dv), hbm,
                    PEAK_FLOPS_BF16)
 
 
@@ -163,8 +194,14 @@ def bidir_attention_cell(bucket, g, n, dk, dv):
 # The serving geometry: ViTConfig × DEFAULT_BUCKETS
 # ---------------------------------------------------------------------------
 
-def cells_for_bucket(cfg, b) -> list:
-    """Every kernel's serving call sites at batch-bucket b.
+MATMUL_KERNELS = ("shift_matmul", "add_matmul", "add_matmul_packed")
+
+
+def serving_sites(cfg, b) -> list:
+    """Every kernel's serving call-site geometry at batch-bucket b, as plain
+    dicts — the single source both `cells_for_bucket` (the contract table)
+    and `kernels.autotune` (the search-space enumerator) iterate, so the
+    tuner can never tune a geometry the table doesn't model.
 
     Site geometries come from the ShiftAddViT serving path: projections see
     (B·N_patches, d) token matrices; the binary attention matmuls group over
@@ -174,25 +211,48 @@ def cells_for_bucket(cfg, b) -> list:
     n, d, f, h = cfg.n_patches, cfg.d_model, cfg.d_ff, cfg.n_heads
     dh = d // h
     toks = b * n
-    cells = [
-        matmul_cell("shift_matmul", "qkvo_proj", b, 1, toks, d, d,
-                    w_bytes=1, adapt_bn=False),
-        matmul_cell("shift_matmul", "moe_shift_up", b, 1, toks, d, f,
-                    w_bytes=1, adapt_bn=False),
-        matmul_cell("shift_matmul", "moe_shift_down", b, 1, toks, f, d,
-                    w_bytes=1, adapt_bn=False),
-        matmul_cell("add_matmul", "ktv", b, b * h, dh, n, dh,
-                    w_bytes=1, adapt_bn=True),
-        matmul_cell("add_matmul", "q_ktv", b, b * h, n, dh, dh,
-                    w_bytes=1, adapt_bn=True),
-        matmul_cell("add_matmul_packed", "ktv", b, b * h, dh, n, dh,
-                    w_bytes=1, adapt_bn=True, packed_k=True),
-        matmul_cell("add_matmul_packed", "q_ktv", b, b * h, n, dh, dh,
-                    w_bytes=1, adapt_bn=True, packed_k=True),
-        linear_attention_cell(b, b * h, n, dh, dh),
-        bidir_attention_cell(b, b * h, n, dh, dh),
+    return [
+        dict(kernel="shift_matmul", site="qkvo_proj", g=1, m=toks, k=d, n=d,
+             w_bytes=1, adapt_bn=False),
+        dict(kernel="shift_matmul", site="moe_shift_up", g=1, m=toks, k=d,
+             n=f, w_bytes=1, adapt_bn=False),
+        dict(kernel="shift_matmul", site="moe_shift_down", g=1, m=toks, k=f,
+             n=d, w_bytes=1, adapt_bn=False),
+        dict(kernel="add_matmul", site="ktv", g=b * h, m=dh, k=n, n=dh,
+             w_bytes=1, adapt_bn=True),
+        dict(kernel="add_matmul", site="q_ktv", g=b * h, m=n, k=dh, n=dh,
+             w_bytes=1, adapt_bn=True),
+        dict(kernel="add_matmul_packed", site="ktv", g=b * h, m=dh, k=n,
+             n=dh, w_bytes=1, adapt_bn=True, packed_k=True),
+        dict(kernel="add_matmul_packed", site="q_ktv", g=b * h, m=n, k=dh,
+             n=dh, w_bytes=1, adapt_bn=True, packed_k=True),
+        dict(kernel="linear_attention", site="causal_attn", g=b * h, n=n,
+             dk=dh, dv=dh),
+        dict(kernel="bidir_linear_attention", site="encoder_attn", g=b * h,
+             n=n, dk=dh, dv=dh),
     ]
-    return cells
+
+
+def cell_for_site(site_spec: dict, bucket: int, blocks=None) -> Cell:
+    """One `serving_sites` entry → its contract Cell, optionally under tuned
+    block caps (the autotuner's cost oracle)."""
+    s = dict(site_spec)
+    kernel, site = s.pop("kernel"), s.pop("site")
+    if kernel in MATMUL_KERNELS:
+        return matmul_cell(kernel, site, bucket, s["g"], s["m"], s["k"],
+                           s["n"], w_bytes=s["w_bytes"],
+                           adapt_bn=s["adapt_bn"],
+                           packed_k=s.get("packed_k", False), blocks=blocks)
+    if kernel == "linear_attention":
+        return linear_attention_cell(bucket, s["g"], s["n"], s["dk"],
+                                     s["dv"], blocks=blocks)
+    assert kernel == "bidir_linear_attention", kernel
+    return bidir_attention_cell(bucket, s["g"], s["n"], s["dk"], s["dv"])
+
+
+def cells_for_bucket(cfg, b) -> list:
+    """Every kernel's serving call sites at batch-bucket b (untuned blocks)."""
+    return [cell_for_site(spec, b) for spec in serving_sites(cfg, b)]
 
 
 def pallas_kernel_names() -> set:

@@ -81,6 +81,9 @@ class DeployPlan:
       (the serving dispatch routes one group per batch row, so these are
       tokens-per-image — e.g. `cfg.n_patches` for the ViT engine — not
       flattened co-batch group sizes).
+    tune: optional kernels.autotune.TuneTable the frozen program's kernel
+      calls consume (threaded by the engine to every infer; hashable, so the
+      jit cache keys on it). None → module-default block caps.
     """
 
     params: Any
@@ -88,6 +91,7 @@ class DeployPlan:
     frozen_linears: int = 0
     moe_layers: int = 0
     token_counts: Tuple[int, ...] = ()
+    tune: Any = None
 
 
 def freeze_params(params, impl: str):
@@ -109,7 +113,8 @@ def freeze_params(params, impl: str):
     return walk(params), count
 
 
-def prepare_inference(model, params, impl=None, token_counts=()) -> DeployPlan:
+def prepare_inference(model, params, impl=None, token_counts=(),
+                      tune=None) -> DeployPlan:
     """Build the DeployPlan for `model` + `params` (ISSUE 3 tentpole entry).
 
     model: anything with an optional `blocks` list whose block feeds may be
@@ -135,4 +140,5 @@ def prepare_inference(model, params, impl=None, token_counts=()) -> DeployPlan:
             for t in token_counts:
                 feed.capacity_plan(t)
     return DeployPlan(params=frozen, impl=impl, frozen_linears=n_frozen,
-                      moe_layers=moe_layers, token_counts=token_counts)
+                      moe_layers=moe_layers, token_counts=token_counts,
+                      tune=tune)

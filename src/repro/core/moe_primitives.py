@@ -55,8 +55,15 @@ class _MLPExpert:
         return {"up": lin(params["up"], ("embed", "mlp")),
                 "down": lin(params["down"], ("mlp", "embed"))}
 
-    def __call__(self, params, x):
-        return self.down(params["down"], self.activation(self.up(params["up"], x)))
+    accepts_impl = True
+
+    def __call__(self, params, x, impl=None, tune=None):
+        up, down = self.up, self.down
+        if getattr(up, "accepts_impl", False):          # shift expert
+            h = up(params["up"], x, impl=impl, tune=tune)
+            return down(params["down"], self.activation(h), impl=impl,
+                        tune=tune)
+        return down(params["down"], self.activation(up(params["up"], x)))
 
 
 class _LinearExpert:
@@ -74,7 +81,11 @@ class _LinearExpert:
         return {"proj": {k: (("embed", "mlp") if k != "bias" else ("mlp",))
                          for k in params["proj"]}}
 
-    def __call__(self, params, x):
+    accepts_impl = True
+
+    def __call__(self, params, x, impl=None, tune=None):
+        if getattr(self.proj, "accepts_impl", False):   # shift expert
+            return self.proj(params["proj"], x, impl=impl, tune=tune)
         return self.proj(params["proj"], x)
 
 
@@ -273,7 +284,10 @@ class MoEPrimitives:
                     for off, cap in zip(offsets, caps)]
         return buf, info, segments, ungroup
 
-    def infer(self, params, x):
+    # Serving threads kernel impl/tune through to the shift experts.
+    accepts_impl = True
+
+    def infer(self, params, x, impl=None, tune=None):
         """Deterministic inference dispatch — the serving fast path.
 
         Routes on clean-logit argmax (no router noise, no rng) with static
@@ -293,7 +307,9 @@ class MoEPrimitives:
         from repro.nn.dispatch import combine_infer
 
         _, info, segments, ungroup = self._dispatch_tokens(params, x)
-        outs = [expert(params["experts"][i], seg)
+        outs = [expert(params["experts"][i], seg, impl=impl, tune=tune)
+                if getattr(expert, "accepts_impl", False)
+                else expert(params["experts"][i], seg)
                 for i, (expert, seg) in enumerate(zip(self.experts, segments))]
         return ungroup(combine_infer(outs, info)).astype(x.dtype)
 

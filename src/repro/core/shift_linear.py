@@ -66,7 +66,11 @@ class ShiftLinear:
             out["bias"] = params["bias"]
         return out
 
-    def __call__(self, params, x):
+    # Serving entry points thread kernel selection explicitly (engine →
+    # blocks → ops); nn.layers.call_linear keys on this class attribute.
+    accepts_impl = True
+
+    def __call__(self, params, x, impl=None, tune=None):
         x = x.astype(self.dtype)
         if "w_deploy" in params:
             # Deployment-frozen XLA path (core.deploy.prepare_inference): the
@@ -81,7 +85,11 @@ class ShiftLinear:
         else:
             from repro.kernels import ops  # lazy: kernels import core
 
-            y = ops.shift_matmul(x, params["w_packed"])
+            # impl/tune arrive threaded from the serving engine; impl=None
+            # (ad-hoc callers) falls back to ops.default_impl() inside the
+            # wrapper. The w_deploy/w_latent branches above have no kernel
+            # selection, so the kwargs are intentionally unused there.
+            y = ops.shift_matmul(x, params["w_packed"], impl, tune)
         if self.use_bias:
             y = y + params["bias"].astype(self.dtype)
         return y

@@ -66,6 +66,9 @@ def main(argv=None):
     ap.add_argument("--d-model", type=int, default=128)
     ap.add_argument("--impl", choices=["xla", "pallas", "interpret"],
                     default=None)
+    ap.add_argument("--tune", default=None, metavar="TUNE_kernels.json",
+                    help="persisted autotune table "
+                         "(repro.launch.autotune output)")
     ap.add_argument("--no-freeze", action="store_true",
                     help="serve live params instead of the DeployPlan")
     ap.add_argument("--verify-replay", action="store_true",
@@ -79,9 +82,15 @@ def main(argv=None):
     ap.add_argument("--out", default="BENCH_traffic.json")
     args = ap.parse_args(argv)
 
-    if args.impl:
-        from repro.kernels import ops
-        ops.set_default_impl(args.impl)
+    # --impl threads explicitly (traffic_sweep → replicas → engines), not
+    # via the old process-global ops.set_default_impl override.
+    tune = None
+    if args.tune:
+        from repro.kernels import autotune
+        tune = autotune.load_table(args.tune)
+        if tune is None:
+            log.warning("could not load tune table %s; serving with "
+                        "default block caps", args.tune)
 
     cfg = ViTConfig(image_size=args.image_size, n_layers=args.layers,
                     d_model=args.d_model, d_ff=2 * args.d_model)
@@ -91,7 +100,7 @@ def main(argv=None):
         cfg, scenario=args.scenario, policies=policies,
         n_requests=args.requests, seed=args.seed, replicas=args.replicas,
         arm=args.arm, utilization=args.utilization, buckets=args.buckets,
-        freeze=not args.no_freeze, impl=args.impl,
+        freeze=not args.no_freeze, impl=args.impl, tune=tune,
         slack_frac=args.slack_frac, linger_frac=args.linger_frac,
         max_queue_images=args.max_queue_images,
         target_p99_s=None if args.target_p99 is None

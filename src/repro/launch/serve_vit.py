@@ -52,22 +52,33 @@ def main():
                     default=None,
                     help="force the kernel implementation (CI forces "
                          "interpret to run the Pallas kernel bodies on CPU)")
+    ap.add_argument("--tune", default=None, metavar="TUNE_kernels.json",
+                    help="persisted autotune table "
+                         "(repro.launch.autotune output)")
     ap.add_argument("--no-freeze", action="store_true",
                     help="serve live params instead of the deployment-frozen "
                          "DeployPlan (A/B arm; logits are bit-identical)")
     ap.add_argument("--out", default="BENCH_vit.json")
     args = ap.parse_args()
 
-    if args.impl:
-        from repro.kernels import ops
-        ops.set_default_impl(args.impl)
+    # --impl threads explicitly to every engine (policy_sweep and the
+    # streaming engine below), not via the old process-global
+    # ops.set_default_impl override.
+    tune = None
+    if args.tune:
+        from repro.kernels import autotune
+        tune = autotune.load_table(args.tune)
+        if tune is None:
+            log.warning("could not load tune table %s; serving with "
+                        "default block caps", args.tune)
 
     cfg = ViTConfig(image_size=args.image_size, n_layers=args.layers,
                     d_model=args.d_model, d_ff=2 * args.d_model)
 
     if args.sweep:
         rec = policy_sweep(cfg, batch=args.batch, buckets=args.buckets,
-                           freeze=not args.no_freeze, impl=args.impl)
+                           freeze=not args.no_freeze, impl=args.impl,
+                           tune=tune)
         with open(args.out, "w") as f:
             json.dump(rec, f, indent=2)
         for name, r in rec["policies"].items():
@@ -86,7 +97,7 @@ def main():
     engine = BucketedViTEngine(model, params,
                                buckets=args.buckets or DEFAULT_BUCKETS,
                                freeze=not args.no_freeze,
-                               impl=args.impl).warmup()
+                               impl=args.impl, tune=tune).warmup()
     traces = engine.trace_count
     log.info("warmup: compiled %d bucket programs %s (frozen=%s%s)", traces,
              list(engine.buckets), engine.frozen,

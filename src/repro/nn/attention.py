@@ -151,14 +151,19 @@ class Attention:
             s["dwconv"] = {"kernel": (None, "heads"), "bias": ("heads",)}
         return s
 
+    # Serving threads kernel impl/tune explicitly (blocks → here → ops).
+    accepts_impl = True
+
     # -- shared projection helpers ------------------------------------------
-    def _qkv(self, params, x, positions):
+    def _qkv(self, params, x, positions, impl=None, tune=None):
         """Returns (q, k, v, vraw); vraw is the pre-DWConv V projection —
         the raw stream the decode conv cache is warmed from."""
         b, n, _ = x.shape
-        q = self.q_proj(params["q"], x).reshape(b, n, self.h, self.dh)
-        k = self.k_proj(params["k"], x).reshape(b, n, self.hkv, self.dh)
-        vraw = self.v_proj(params["v"], x)
+        q = L.call_linear(self.q_proj, params["q"], x, impl,
+                          tune).reshape(b, n, self.h, self.dh)
+        k = L.call_linear(self.k_proj, params["k"], x, impl,
+                          tune).reshape(b, n, self.hkv, self.dh)
+        vraw = L.call_linear(self.v_proj, params["v"], x, impl, tune)
         vflat = vraw
         if self.dwconv is not None:
             vflat = vflat + self.dwconv(params["dwconv"], vflat)
@@ -203,27 +208,28 @@ class Attention:
         return self.o_proj(params["o"], out)
 
     # -- inference -----------------------------------------------------------
-    def infer(self, params, x, positions=None):
+    def infer(self, params, x, positions=None, impl=None, tune=None):
         """Serving forward. For the encoder binary-linear mode (the ViT path)
         this routes through the fused bidirectional Hamming-attention op
         (kernels.ops.binary_linear_attention_bidir): one pass accumulating
-        KV/ksum then emitting outputs, no STE machinery — impl-selected
-        (Pallas kernel on TPU, sign-trick XLA twin elsewhere). Every other
-        mode falls back to the train=False forward."""
+        KV/ksum then emitting outputs, no STE machinery. impl/tune arrive
+        threaded from the serving engine (never a process global); every
+        other mode falls back to the train=False forward, whose kernels have
+        no impl selection."""
         if self.mode != "binary_linear" or self.causal:
             return self(params, x, positions=positions, train=False)
         from repro.kernels import ops
 
         b, n, _ = x.shape
-        q, k, v, _ = self._qkv(params, x, positions)
+        q, k, v, _ = self._qkv(params, x, positions, impl=impl, tune=tune)
         g = self.h // self.hkv
         kf = _repeat_kv(k, g)
         vf = _repeat_kv(v, g)
         out = ops.binary_linear_attention_bidir(
             q.astype(jnp.float32), kf.astype(jnp.float32),
-            vf.astype(jnp.float32)).astype(x.dtype)
+            vf.astype(jnp.float32), impl=impl, tune=tune).astype(x.dtype)
         out = out.transpose(0, 2, 1, 3).reshape(b, n, self.h * self.dh)
-        return self.o_proj(params["o"], out)
+        return L.call_linear(self.o_proj, params["o"], out, impl, tune)
 
     # -- decode --------------------------------------------------------------
     def init_cache(self, batch, max_len, dtype=jnp.bfloat16):

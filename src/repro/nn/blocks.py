@@ -108,20 +108,31 @@ class TransformerBlock:
         return x + ff, aux
 
     # -- inference -----------------------------------------------------------
-    def _infer_feed(self, params, x):
+    # impl/tune thread from the engine to the kernel-selecting leaves
+    # (ShiftLinear, the fused attention op) and stop at layers without one.
+    def _infer_feed(self, params, x, impl=None, tune=None):
         if hasattr(self.feed, "infer"):
+            if getattr(self.feed, "accepts_impl", False):
+                return self.feed.infer(params["feed"], x, impl=impl,
+                                       tune=tune)
             return self.feed.infer(params["feed"], x)
         if self._feed_has_aux:
             y, _ = self.feed(params["feed"], x, train=False)
             return y
+        if getattr(self.feed, "accepts_impl", False):
+            return self.feed(params["feed"], x, impl=impl, tune=tune)
         return self.feed(params["feed"], x)
 
-    def _infer_mixer(self, params, h, positions):
+    def _infer_mixer(self, params, h, positions, impl=None, tune=None):
         if hasattr(self.mixer, "infer"):
+            if getattr(self.mixer, "accepts_impl", False):
+                return self.mixer.infer(params["mixer"], h,
+                                        positions=positions, impl=impl,
+                                        tune=tune)
             return self.mixer.infer(params["mixer"], h, positions=positions)
         return self.mixer(params["mixer"], h, positions=positions, train=False)
 
-    def infer(self, params, x, positions=None):
+    def infer(self, params, x, positions=None, impl=None, tune=None):
         """Aux-free inference forward: same residual wiring as __call__ with
         train=False, but mixers take their serving path (fused bidirectional
         Hamming attention for encoder binary-linear mode) and MoE feeds their
@@ -133,12 +144,12 @@ class TransformerBlock:
         DeployPlan's frozen params so no per-call weight decode survives in
         the compiled program."""
         h = self.norm1(params["norm1"], x)
-        mix = self._infer_mixer(params, h, positions)
+        mix = self._infer_mixer(params, h, positions, impl=impl, tune=tune)
         if self.parallel:
-            return x + mix + self._infer_feed(params, h)
+            return x + mix + self._infer_feed(params, h, impl=impl, tune=tune)
         x = x + mix
         h2 = self.norm2(params["norm2"], x)
-        return x + self._infer_feed(params, h2)
+        return x + self._infer_feed(params, h2, impl=impl, tune=tune)
 
     # -- decode ---------------------------------------------------------------
     def init_cache(self, batch, max_len, dtype=jnp.bfloat16):

@@ -26,6 +26,16 @@ def make_linear(kind, d_in, d_out, use_bias=False, dtype=jnp.bfloat16,
                        param_dtype=param_dtype, mode=mode)
 
 
+def call_linear(layer, params, x, impl=None, tune=None):
+    """Apply a `make_linear` product, threading kernel impl/tune selection to
+    layers that have one (ShiftLinear → kernels.ops). Dense has no kernel
+    selection; the kwargs stop here instead of leaking a process global into
+    the call (the old `ops.default_impl()` memoization bug)."""
+    if getattr(layer, "accepts_impl", False):
+        return layer(params, x, impl=impl, tune=tune)
+    return layer(params, x)
+
+
 def linear_spec(in_axis, out_axis, use_bias=False):
     """Logical spec for Dense/ShiftLinear params (same tree keys either way:
     kernel/w_latent/w_packed are all (in, out))."""
@@ -182,13 +192,17 @@ class MLP:
             s["gate"] = match_linear_spec(params["gate"], linear_spec("embed", "mlp"))
         return s
 
-    def __call__(self, params, x):
-        h = self.up(params["up"], x)
+    # Shift-MLPs route through ShiftLinear; serving threads impl/tune here.
+    accepts_impl = True
+
+    def __call__(self, params, x, impl=None, tune=None):
+        h = call_linear(self.up, params["up"], x, impl, tune)
         if self.gated:
-            h = self.act(self.gate(params["gate"], x)) * h
+            h = self.act(call_linear(self.gate, params["gate"], x,
+                                     impl, tune)) * h
         else:
             h = self.act(h)
-        return self.down(params["down"], h)
+        return call_linear(self.down, params["down"], h, impl, tune)
 
 
 class DWConv1D:

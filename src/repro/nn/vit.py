@@ -99,16 +99,19 @@ class ShiftAddViT:
         n = max(len(self.blocks), 1)
         return logits, {"balance_loss": bal / n, "drop_fraction": drop / n}
 
-    def prepare_inference(self, params, impl=None, token_counts=()):
+    def prepare_inference(self, params, impl=None, token_counts=(),
+                          tune=None):
         """Deployment freeze (core.deploy): decode/pack every shift weight
         once and warm MoE capacity plans. Returns a DeployPlan whose `params`
         feed `infer` with exact logit parity — the serving engine closes its
-        jitted forward over them."""
+        jitted forward over them. `tune` (a kernels.autotune.TuneTable) is
+        recorded on the plan and must be threaded to `infer` alongside the
+        frozen params."""
         from repro.core.deploy import prepare_inference
         return prepare_inference(self, params, impl=impl,
-                                 token_counts=token_counts)
+                                 token_counts=token_counts, tune=tune)
 
-    def infer(self, params, images):
+    def infer(self, params, images, impl=None, tune=None):
         """Inference fast path: images (B, H, W, C) → logits (B, n_classes).
 
         The serving forward (repro.serve.vision jits this): no aux-loss
@@ -133,7 +136,7 @@ class ShiftAddViT:
         x = self.patch_embed(params["patch_embed"],
                              self.patchify(images).astype(self.mc.activation_dtype))
         for blk, p in zip(self.blocks, params["blocks"]):
-            x = blk.infer(p, x, positions=None)
+            x = blk.infer(p, x, positions=None, impl=impl, tune=tune)
         x = self.final_norm(params["final_norm"], x)
         pooled = jnp.mean(x, axis=1)                       # (B, d)
         w = params["head"]["kernel"].astype(pooled.dtype)

@@ -285,7 +285,8 @@ def serve_trace(pool, scheduler: MicroBatchScheduler, trace: Trace, *,
 def traffic_sweep(base_cfg=None, *, scenario="poisson",
                   policies=("dense", "shiftadd"), n_requests=500, seed=0,
                   replicas=2, arm="auto", utilization=0.4, buckets=None,
-                  freeze=True, impl=None, max_size=None, slack_frac=0.5,
+                  freeze=True, impl=None, tune=None, max_size=None,
+                  slack_frac=0.5,
                   linger_frac=1.0, max_queue_images=None, target_p99_s=None,
                   calibrate_iters=3, verify_replay=False,
                   verify_one_vs_n=False, collect_logits=False) -> dict:
@@ -336,7 +337,7 @@ def traffic_sweep(base_cfg=None, *, scenario="poisson",
         arms[name] = (model, params)
         pools[name] = make_replicas(model, params, n_replicas=replicas,
                                     arm=arm, buckets=buckets, freeze=freeze,
-                                    impl=impl).warmup()
+                                    impl=impl, tune=tune).warmup()
     # Interleaved calibration: load drift hits every arm equally, so the
     # p99 crossover the CI gates compares calibrations taken under the
     # same conditions (see calibrate_service_models).
@@ -365,6 +366,8 @@ def traffic_sweep(base_cfg=None, *, scenario="poisson",
         "image_size": base_cfg.image_size,
         "frozen": bool(freeze),
         "impl": impl or ops.default_impl(),
+        "tuned": tune is not None,
+        "tune_meta": dict(getattr(tune, "meta", ()) or ()) or None,
         "utilization": utilization,
         "trace": trace.summary(),
         "budgets_s": budgets,
@@ -415,7 +418,7 @@ def traffic_sweep(base_cfg=None, *, scenario="poisson",
             model, params = arms[name]
             solo = ThreadPoolReplicas(model, params, n_replicas=1,
                                       buckets=pool.buckets, freeze=freeze,
-                                      impl=impl).warmup()
+                                      impl=impl, tune=tune).warmup()
             pmax_solo = solo.buckets[-1]
             solo_sched = MicroBatchScheduler(
                 solo.buckets, svc,

@@ -5,30 +5,81 @@ BENCH_vit.json (per-batch sweep latencies) and BENCH_traffic.json
 summary keys, produced here, so dashboards and CI gates read one schema:
 
     {"p50_s": ..., "p95_s": ..., "p99_s": ..., "mean_s": ..., "max_s": ...,
-     "n": ...}
+     "n": ..., "timer_resolution_s": ..., "method": "nearest-rank"}
 
-Percentiles use sorted linear interpolation (numpy's default), which is
-well-defined down to a single sample — a one-element list reports that
-element for every percentile rather than NaN.
+Percentiles use NEAREST-RANK (the p-th percentile is an actual observed
+sample: `sorted(xs)[ceil(p/100 * n) - 1]`), not interpolation. At the tiny
+sample counts the CI sweeps run (n = 2..20 per cell), interpolated "p99"
+is an extrapolation between the two largest samples — a value nobody
+measured, dominated by single-sample noise — and gating on it made the
+freeze/pallas checks flap. Nearest-rank is well-defined down to n=1 (every
+percentile reports that one element) and at n < 100 degrades honestly:
+p99 of 10 samples IS the max, and says so.
+
+`gate_percentile(n)` encodes which percentile a gate may trust at a given
+n: p99 needs >= 100 samples to be a distinct order statistic, p95 needs
+>= 20, below that only p50 is meaningful. check_vit_freeze.py /
+check_vit_pallas.py / check_traffic.py pick their gate key through it.
 """
 from __future__ import annotations
+
+import math
+import time
 
 import numpy as np
 
 PERCENTILES = (50, 95, 99)
 
 
+def nearest_rank(xs_sorted, p: float) -> float:
+    """p-th percentile by nearest-rank on an already-sorted sequence.
+
+    rank = ceil(p/100 * n), clamped to [1, n]; returns xs_sorted[rank-1].
+    Always an observed sample, never an interpolated value.
+    """
+    n = len(xs_sorted)
+    if n == 0:
+        return 0.0
+    rank = min(max(int(math.ceil(p / 100.0 * n)), 1), n)
+    return float(xs_sorted[rank - 1])
+
+
+def timer_resolution_s() -> float:
+    """Resolution of the clock every serving benchmark times with."""
+    return float(time.get_clock_info("perf_counter").resolution)
+
+
+def gate_percentile(n: int) -> str:
+    """Which summary key a CI gate may trust at sample count n.
+
+    p99 is only a distinct order statistic at n >= 100 (below that it
+    equals the max); p95 needs n >= 20; otherwise gate on the median.
+    Returns the summary-dict key, e.g. "p50_s".
+    """
+    if n >= 100:
+        return "p99_s"
+    if n >= 20:
+        return "p95_s"
+    return "p50_s"
+
+
 def latency_summary(samples_s) -> dict:
     """Summary stats of a list of latencies (seconds) under the shared
     BENCH_* schema. Empty input returns zeros with n=0 (a shed-everything
-    run must still serialize)."""
-    xs = np.asarray(list(samples_s), dtype=np.float64)
+    run must still serialize). Percentiles are nearest-rank (see module
+    docstring); `timer_resolution_s` records the perf_counter granularity
+    so downstream readers can tell a 1e-5 s median apart from timer noise.
+    """
+    xs = np.sort(np.asarray(list(samples_s), dtype=np.float64))
+    res = timer_resolution_s()
     if xs.size == 0:
         out = {f"p{p}_s": 0.0 for p in PERCENTILES}
-        out.update(mean_s=0.0, max_s=0.0, n=0)
+        out.update(mean_s=0.0, max_s=0.0, n=0,
+                   timer_resolution_s=res, method="nearest-rank")
         return out
-    out = {f"p{p}_s": float(np.percentile(xs, p)) for p in PERCENTILES}
-    out.update(mean_s=float(xs.mean()), max_s=float(xs.max()), n=int(xs.size))
+    out = {f"p{p}_s": nearest_rank(xs, p) for p in PERCENTILES}
+    out.update(mean_s=float(xs.mean()), max_s=float(xs[-1]), n=int(xs.size),
+               timer_resolution_s=res, method="nearest-rank")
     return out
 
 

@@ -70,11 +70,11 @@ class ThreadPoolReplicas(_ReplicaBase):
     arm = "thread"
 
     def __init__(self, model, params, n_replicas=2, buckets=DEFAULT_BUCKETS,
-                 freeze=True, impl=None, share_engine=True):
+                 freeze=True, impl=None, tune=None, share_engine=True):
         assert n_replicas >= 1
         n_engines = 1 if share_engine else n_replicas
         self.engines = [BucketedViTEngine(model, params, buckets=buckets,
-                                          freeze=freeze, impl=impl)
+                                          freeze=freeze, impl=impl, tune=tune)
                         for _ in range(n_engines)]
         self.n_slots = n_replicas
         self._pool = concurrent.futures.ThreadPoolExecutor(
@@ -102,7 +102,7 @@ class DataParallelReplicas(_ReplicaBase):
     arm = "sharded"
 
     def __init__(self, model, params, n_replicas=2, buckets=DEFAULT_BUCKETS,
-                 freeze=True, impl=None, devices=None):
+                 freeze=True, impl=None, tune=None, devices=None):
         devices = list(devices if devices is not None else jax.devices())
         if len(devices) < n_replicas:
             raise ValueError(
@@ -113,7 +113,7 @@ class DataParallelReplicas(_ReplicaBase):
                          devices=devices[:n_replicas])
         self.mesh = mesh
         self.engines = [BucketedViTEngine(model, params, buckets=buckets,
-                                          freeze=freeze, impl=impl,
+                                          freeze=freeze, impl=impl, tune=tune,
                                           mesh=mesh)]
         self.n_slots = 1        # one logical server, n× per-batch speed
 

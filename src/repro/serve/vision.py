@@ -88,7 +88,7 @@ class BucketedViTEngine:
     """
 
     def __init__(self, model: ShiftAddViT, params, buckets=DEFAULT_BUCKETS,
-                 freeze=True, impl=None, mesh=None):
+                 freeze=True, impl=None, tune=None, mesh=None):
         from repro.kernels import ops
 
         assert len(buckets) > 0 and min(buckets) >= 1
@@ -104,16 +104,14 @@ class BucketedViTEngine:
         self.buckets = tuple(sorted(set(
             dp * ((int(b) + dp - 1) // dp) for b in buckets)))
         self.frozen = bool(freeze)
-        if impl is not None and impl != ops.default_impl():
-            # The plan's weight format must match the kernels the jitted
-            # forward will actually run (those follow the process-wide
-            # default) — a silent mismatch would e.g. freeze packed int8 for
-            # Pallas while every call takes the XLA twin's per-call decode.
-            raise ValueError(
-                f"engine impl={impl!r} disagrees with the process default "
-                f"{ops.default_impl()!r}; call kernels.ops.set_default_impl"
-                f"({impl!r}) first (the CLI --impl flag does this)")
+        # The engine's impl is resolved ONCE here and threaded explicitly
+        # through model.infer → blocks → kernels.ops on every call, so the
+        # plan's weight format and the kernels the jitted forward runs can
+        # never disagree. (The old design instead RAISED on any impl that
+        # differed from ops.default_impl() — a memoized process global that
+        # every impl=None call site silently inherited.)
         self.impl = impl or ops.default_impl()
+        self.tune = tune
         self.trace_count = 0        # incremented only when jit (re)traces
         self.batches_served = 0
         self.images_served = 0
@@ -144,16 +142,19 @@ class BucketedViTEngine:
             # rows are vmapped over, never a row's capacity split).
             self.plan = model.prepare_inference(
                 params, impl=self.impl,
-                token_counts=(model.cfg.n_patches,))
+                token_counts=(model.cfg.n_patches,), tune=tune)
             run_params = self.plan.params
+            impl_, tune_ = self.impl, self.tune
 
             # Frozen params are closed over, not passed: they are constants
-            # of the serving program, never retraced against.
+            # of the serving program, never retraced against. impl/tune ride
+            # along as explicit closure constants — never a process global.
             def fwd(images):
                 # Runs at trace time, not at execution — the compile counter
                 # the no-recompilation gate asserts on.
                 self.trace_count += 1  # lint: allow(LT004 trace-time compile counter, guarded by gates)
-                return model.infer(run_params, images)
+                return model.infer(run_params, images, impl=impl_,
+                                   tune=tune_)
 
             self._fwd = fwd
             self._call = jax.jit(fwd, donate_argnums=self.donate_argnums,
@@ -166,9 +167,11 @@ class BucketedViTEngine:
             # per-forward po2 decode out of the program (which would turn
             # the no-freeze benchmark arm into a de-facto frozen one), and
             # a caller that swaps engine.params serves the new weights.
+            impl_, tune_ = self.impl, self.tune
+
             def fwd(p, images):
                 self.trace_count += 1  # lint: allow(LT004 trace-time compile counter, guarded by gates)
-                return model.infer(p, images)
+                return model.infer(p, images, impl=impl_, tune=tune_)
 
             if jit_kw:
                 from repro.distributed import sharding as shd
@@ -446,7 +449,7 @@ def build_policy_model(base_cfg: ViTConfig, name: str,
 
 def policy_sweep(base_cfg: ViTConfig = None, batch=32, iters=10,
                  buckets=None, seed=0, policies=tuple(SWEEP_POLICIES),
-                 freeze=True, impl=None, breakdown=False):
+                 freeze=True, impl=None, tune=None, breakdown=False):
     """Measure every policy arm on the same pretrained dense weights.
 
     Returns the BENCH_vit.json record: per-policy batch latency (median over
@@ -455,6 +458,10 @@ def policy_sweep(base_cfg: ViTConfig = None, batch=32, iters=10,
     deployment-freeze arm (DeployPlan closed over by the jitted forward) vs
     the live-params arm; the record carries `frozen` and the
     shiftadd-vs-dense latency ratio so the crossover is tracked across PRs.
+    impl/tune thread explicitly to every engine (never via a process
+    default); each policy arm also reports PER-BUCKET latency summaries
+    (`bucket_latency`) — the per-bucket series check_vit_pallas.py gates
+    pallas <= xla on.
     """
     base_cfg = base_cfg or ViTConfig()
     buckets = tuple(buckets) if buckets else DEFAULT_BUCKETS
@@ -476,13 +483,16 @@ def policy_sweep(base_cfg: ViTConfig = None, batch=32, iters=10,
         "iters": iters,
         "frozen": bool(freeze),
         "impl": impl or ops.default_impl(),
+        "tuned": tune is not None,
+        "tune_meta": dict(getattr(tune, "meta", ()) or ()) or None,
         "policies": {},
     }
     for name in policies:
         model, params = build_policy_model(base_cfg, name, dense_model,
                                            dense_params)
         engine = BucketedViTEngine(model, params, buckets=buckets,
-                                   freeze=freeze, impl=impl).warmup()
+                                   freeze=freeze, impl=impl,
+                                   tune=tune).warmup()
         # The effective bucket set comes off the engine — records and the
         # CI gate must never re-declare it (the old drift: DEFAULT_BUCKETS
         # advertised a 128 bucket the benchmark path never compiled).
@@ -497,6 +507,21 @@ def policy_sweep(base_cfg: ViTConfig = None, batch=32, iters=10,
         # Median, not mean: per-batch wall clock on shared CI machines has
         # heavy right-tail noise and the crossover ratio gates CI.
         latency_s = sorted(times)[len(times) // 2]
+        # Per-bucket series: the granularity check_vit_pallas.py gates
+        # pallas <= xla at. Buckets above the benchmark batch have no full
+        # batch to feed and are skipped (never silently zero-filled).
+        bucket_latency = {}
+        for bkt in engine.buckets:
+            if bkt > batch:
+                continue
+            sub = imgs[:bkt]
+            jax.block_until_ready(engine.infer(sub))    # already compiled
+            bts = []
+            for _ in range(iters):
+                t0 = time.perf_counter()
+                jax.block_until_ready(engine.infer(sub))
+                bts.append(time.perf_counter() - t0)
+            bucket_latency[str(bkt)] = latency_summary(bts)
         e = vit_energy_per_image(model.cfg)
         record["policies"][name] = {
             "latency_s_per_batch": latency_s,
@@ -504,6 +529,7 @@ def policy_sweep(base_cfg: ViTConfig = None, batch=32, iters=10,
             # Same summary schema as BENCH_traffic.json (serve.metrics):
             # here the samples are per-batch sweep latencies.
             "latency": latency_summary(times),
+            "bucket_latency": bucket_latency,
             "buckets": list(engine.buckets),
             "padding_waste": engine.padding_waste,
             "energy_pj_per_image": e["total_pj"],

@@ -219,8 +219,10 @@ def test_scheduler_is_deterministic():
 
 def test_latency_summary_schema():
     out = latency_summary([0.1, 0.2, 0.3, 0.4])
-    assert set(out) == {"p50_s", "p95_s", "p99_s", "mean_s", "max_s", "n"}
+    assert set(out) == {"p50_s", "p95_s", "p99_s", "mean_s", "max_s", "n",
+                        "timer_resolution_s", "method"}
     assert out["n"] == 4 and out["max_s"] == pytest.approx(0.4)
+    assert out["method"] == "nearest-rank"
     assert out["p50_s"] <= out["p95_s"] <= out["p99_s"] <= out["max_s"]
     one = latency_summary([0.7])
     assert one["p50_s"] == one["p99_s"] == pytest.approx(0.7)

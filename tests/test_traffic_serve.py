@@ -271,7 +271,9 @@ def test_check_traffic_gate_requires_shiftadd_verification(tmp_path):
 
     def arm(**extra):
         base = {"recompiles_after_warmup": 0, "deadline_miss_rate": 0.0,
-                "shed_requests": 0, "latency": {"p99_s": 0.1}}
+                "shed_requests": 0,
+                "latency": {"p50_s": 0.1, "p95_s": 0.1, "p99_s": 0.1,
+                            "n": 10}}
         base.update(extra)
         return base
 

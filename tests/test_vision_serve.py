@@ -162,15 +162,13 @@ def test_interpret_impl_frozen_close():
     model, params, _ = _vit(SHIFTADD)
     imgs = _imgs(4, seed=17)
     want = model.infer(model.prepare_inference(params, impl="xla").params,
-                       imgs)
-    from repro.kernels import ops
-    prev = ops.default_impl()
-    ops.set_default_impl("interpret")
-    try:
-        got = model.infer(
-            model.prepare_inference(params, impl="interpret").params, imgs)
-    finally:
-        ops.set_default_impl(prev)
+                       imgs, impl="xla")
+    # impl threads explicitly end-to-end — no set_default_impl process
+    # global (the old override leaked "interpret" into any engine compiled
+    # concurrently; tests/test_autotune.py pins the jaxpr-level contract).
+    got = model.infer(
+        model.prepare_inference(params, impl="interpret").params, imgs,
+        impl="interpret")
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-2, atol=2e-2)
 
