@@ -28,6 +28,7 @@ from repro.core.policy import STAGE1
 from repro.kernels import ops
 from repro.nn.model import LanguageModel
 from repro.serve.decode import make_decode_loop, make_prefill, make_serve_step
+from repro.serve.metrics import gate_percentile, latency_summary
 
 
 def _model(policy, vocab=512):
@@ -46,16 +47,21 @@ def bench(prompt_len=512, batch=4, new_tokens=64, iters=3):
                                  0, cfg.vocab_size)
 
     # -- chunked parallel prefill (one fused pass) --------------------------
+    # Per-iteration samples summarized by serve.metrics.latency_summary
+    # (nearest-rank percentiles, n/method recorded) instead of ad-hoc means:
+    # one GC pause or host hiccup used to shift the whole headline number.
     prefill = jax.jit(make_prefill(model))
     logits_all, cache = prefill(params, prompts,
                                 model.init_cache(batch, max_len))  # compile
     jax.block_until_ready(logits_all)
-    t0 = time.perf_counter()
+    prefill_samples = []
     for _ in range(iters):
+        t0 = time.perf_counter()
         logits_all, cache = prefill(params, prompts,
                                     model.init_cache(batch, max_len))
-    jax.block_until_ready(logits_all)
-    prefill_s = (time.perf_counter() - t0) / iters
+        jax.block_until_ready(logits_all)
+        prefill_samples.append(time.perf_counter() - t0)
+    prefill_lat = latency_summary(prefill_samples)
 
     # -- token-by-token warmup (the pre-refactor path) ----------------------
     step = jax.jit(make_serve_step(model))
@@ -80,11 +86,20 @@ def bench(prompt_len=512, batch=4, new_tokens=64, iters=3):
     logits0 = logits_all[:, -1]
     toks, _ = loop(params, logits0, cache, keys)   # compile
     jax.block_until_ready(toks)
-    t0 = time.perf_counter()
+    decode_samples = []
     for _ in range(iters):
+        t0 = time.perf_counter()
         toks, _ = loop(params, logits0, cache, keys)
-    jax.block_until_ready(toks)
-    decode_s = (time.perf_counter() - t0) / iters
+        jax.block_until_ready(toks)
+        decode_samples.append(time.perf_counter() - t0)
+    decode_lat = latency_summary(decode_samples)
+
+    # Stats are read at the percentile the sample count supports (p50 at
+    # the CI iteration counts); the scalar *_s keys stay, now defined as
+    # that gated percentile rather than a mean.
+    gate_key = gate_percentile(iters)
+    prefill_s = prefill_lat[gate_key]
+    decode_s = decode_lat[gate_key]
 
     return {
         "impl": ops.default_impl(),
@@ -93,12 +108,15 @@ def bench(prompt_len=512, batch=4, new_tokens=64, iters=3):
         "batch": batch,
         "prompt_len": prompt_len,
         "new_tokens": new_tokens,
+        "gate_key": gate_key,
         "prefill_s": prefill_s,
+        "prefill_latency": prefill_lat,
         "prefill_toks_per_s": batch * prompt_len / prefill_s,
         "token_by_token_warmup_s": warmup_s,
         "token_by_token_toks_per_s": batch * prompt_len / warmup_s,
         "prefill_speedup": warmup_s / prefill_s,
         "decode_s": decode_s,
+        "decode_latency": decode_lat,
         "decode_toks_per_s": batch * new_tokens / decode_s,
     }
 

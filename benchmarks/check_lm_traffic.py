@@ -1,0 +1,124 @@
+"""CI gate for the LM continuous-batching benchmark (lm-traffic job).
+
+    python benchmarks/check_lm_traffic.py BENCH_lm_traffic.json
+
+Fails (exit 1) if, for any policy arm:
+- continuous-batching decode throughput falls below the static fixed-batch
+  refill baseline on the same trace (tokens/s, virtual clock — the win is
+  structural: continuous admission can only keep slots busier than gang
+  refill, so a regression here means the scheduler or the slot lifecycle
+  broke, not that the machine was slow),
+- either mode recompiled a program after warmup, or the pool traced more
+  (or fewer) bucket-shaped prefill programs than engines × prompt buckets
+  (the no-shape-leak contract: every prompt pads into a bucket, every
+  decode chunk reuses ONE program),
+- the two modes served different request sets (the throughput comparison
+  would be vacuous), or anything was shed at the benchmark's unbounded
+  admission queue,
+- a verification field is false OR MISSING: bit-identical seeded replay
+  (dispatch signature, tokens, logits) and the batch=1 serial oracle
+  (`one_vs_n_*`: every request re-served ALONE on the same engine, in the
+  slot the packed run used, must reproduce its packed-batch tokens and
+  logits bit for bit — the token-level batch-invariance contract, MoE
+  shiftadd arm included). A partial oracle
+  comparison (compared < served) also fails: a coverage regression must not
+  impersonate a pass.
+
+As a harness module (benchmarks/run.py): `main(rows)` regenerates the tiny
+verified record and appends one row with the gate verdict, so the gate's
+cost and outcome ride along the benchmark CSV like the other check scripts.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+VERIFY_KEYS = ("replay_identical_dispatch", "replay_bit_identical_tokens",
+               "replay_bit_identical_logits", "one_vs_n_bit_identical_tokens",
+               "one_vs_n_bit_identical_logits")
+
+
+def gate_record(rec):
+    """→ list of failure strings (empty = gate passes); prints a summary."""
+    failures = []
+    for name, r in rec.get("policies", {}).items():
+        c, s = r["continuous"], r["static"]
+        if c["tokens_per_s"] < s["tokens_per_s"]:
+            failures.append(
+                f"{name}: continuous {c['tokens_per_s']:.1f} tok/s below "
+                f"static {s['tokens_per_s']:.1f} tok/s on the same trace")
+        for mode, m in (("continuous", c), ("static", s)):
+            if m["recompiles_after_warmup"] > 0:
+                failures.append(f"{name}/{mode}: recompiled after warmup "
+                                f"({m['recompiles_after_warmup']} traces)")
+            if m["prefill_trace_count"] != m["expected_prefill_traces"]:
+                failures.append(
+                    f"{name}/{mode}: {m['prefill_trace_count']} prefill "
+                    f"programs traced, expected "
+                    f"{m['expected_prefill_traces']} (engines × buckets)")
+            if m["shed_requests"] > 0:
+                failures.append(f"{name}/{mode}: {m['shed_requests']} "
+                                f"requests shed at an unbounded queue")
+        if c["served_requests"] != s["served_requests"]:
+            failures.append(f"{name}: modes served different request sets "
+                            f"({c['served_requests']} vs "
+                            f"{s['served_requests']})")
+        for key in VERIFY_KEYS:
+            if key not in r:
+                failures.append(
+                    f"{name}: {key} missing — the benchmark did not run the "
+                    f"determinism verification (the gate may not be skipped)")
+            elif not r[key]:
+                failures.append(f"{name}: {key} is false — token-level "
+                                f"serving is not deterministic/"
+                                f"batch-invariant under this arm")
+        if ("one_vs_n_compared" in r
+                and r["one_vs_n_compared"] != c["served_requests"]):
+            failures.append(
+                f"{name}: batch=1 oracle comparison was partial — "
+                f"{r['one_vs_n_compared']} of {c['served_requests']} "
+                f"served requests compared")
+        print(f"{name:>9}: cont {c['tokens_per_s']:8.1f} tok/s  static "
+              f"{s['tokens_per_s']:8.1f} tok/s  ratio "
+              f"{r.get('continuous_vs_static_tokens_per_s', 0.0):.3f}x  "
+              f"recompiles {c['recompiles_after_warmup']}"
+              f"/{s['recompiles_after_warmup']}  verify [replay="
+              f"{r.get('replay_bit_identical_logits', 'absent')} 1vsN="
+              f"{r.get('one_vs_n_bit_identical_logits', 'absent')}]")
+    if not rec.get("policies"):
+        failures.append("record has no policy arms")
+    return failures
+
+
+def main(rows) -> None:
+    """benchmarks/run.py harness mode: tiny verified record, gate verdict."""
+    import time
+
+    try:
+        from benchmarks import bench_lm_traffic
+    except ImportError:          # standalone: benchmarks/ is sys.path[0]
+        import bench_lm_traffic
+
+    t0 = time.time()
+    rec = bench_lm_traffic.run(requests=16, slots=2, buckets=(4, 8),
+                               layers=2, d_model=32, vocab=64, verify=True)
+    failures = gate_record(rec)
+    rows.append(("lm_traffic_gate", (time.time() - t0) * 1e6,
+                 f"failures={len(failures)}"))
+
+
+def cli(argv):
+    if len(argv) != 2:
+        print(__doc__)
+        return 2
+    failures = gate_record(json.load(open(argv[1])))
+    for f in failures:
+        print(f"FAIL: {f}")
+    if failures:
+        return 1
+    print("lm-traffic gate OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(cli(sys.argv))

@@ -1,107 +1,73 @@
-"""End-to-end serving driver (the paper's kind is inference): batched
-autoregressive decode of a ShiftAdd LM with O(1) linear-attention state.
+"""End-to-end serving driver (the paper's kind is inference): token-level
+CONTINUOUS batching of a ShiftAdd LM with O(1) linear-attention state.
 
-Serves a queue of requests in fixed-size batches (a minimal continuous-
-batching scheduler: finished rows are refilled from the queue each slot),
-reports tokens/s and per-request outputs.
+A thin driver over the real serving stack — `serve.lm.BucketedLMEngine`
+(packed slot array, jitted bucket-shaped prefill + admit/evict scatters +
+one scan-fused decode-chunk program) fed by `serve.frontend.serve_lm_trace`
+(seeded trace, SlotScheduler, virtual-clock timing) — so the example
+exercises exactly what benchmarks/bench_lm_traffic.py gates: requests join
+a RUNNING decode batch at chunk boundaries, nothing recompiles after
+warmup, and per-request outputs are bit-identical to a batch=1 serial run.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py [--arch yi-9b] [--policy shiftadd]
 """
 import argparse
 import os
 import sys
-import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.registry import get_config
 from repro.nn.model import LanguageModel
-from repro.serve.decode import make_prefill, make_serve_step
+from repro.serve.frontend import calibrate_lm_service, serve_lm_trace
+from repro.serve.replicas import make_lm_replicas
+from repro.serve.scheduler import SlotScheduler
+from repro.serve.traffic import default_budgets, make_trace
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="yi-9b")
     ap.add_argument("--policy", default="shiftadd")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--new-tokens", type=int, default=24)
     args = ap.parse_args()
 
+    # Generous MoE capacity = the no-drop regime decode's row-wise
+    # batch-invariance contract requires (serve.decode's MoE note).
     cfg = get_config(args.arch, policy=args.policy, reduced=True).replace(
         moe_primitives_capacity=2.0)
     model = LanguageModel(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    step = jax.jit(make_serve_step(model), donate_argnums=(2,))
 
-    rng = np.random.default_rng(0)
-    queue = [rng.integers(0, cfg.vocab_size, size=rng.integers(3, 8)).tolist()
-             for _ in range(args.requests)]
-    results = {}
+    pool = make_lm_replicas(model, params, n_replicas=1, n_slots=args.slots,
+                            prompt_buckets=(4, 8), chunk=8).warmup()
+    svc = calibrate_lm_service(pool, iters=1)
 
-    b = args.batch
-    cache = model.init_cache(b, max_len=128)
-    active = [None] * b          # request id per row
-    buffers = [[] for _ in range(b)]
-    remaining = [0] * b
-    next_id = 0
-    t0 = time.perf_counter()
-    decoded = 0
+    # A short poisson burst at roughly one request per decode chunk: slots
+    # free at staggered times, so admissions land mid-decode — the
+    # continuous-batching path, not the drain-and-refill one.
+    budget = svc["prefill_s"][8] + 4 * svc["chunk_s"] * args.new_tokens
+    trace = make_trace("poisson", args.requests, seed=0,
+                       target_images_per_s=4.0 / max(svc["chunk_s"], 1e-6),
+                       budgets_s=default_budgets(budget), max_size=8)
+    res = serve_lm_trace(pool, SlotScheduler(), trace, svc,
+                         mode="continuous",
+                         new_token_range=(args.new_tokens, args.new_tokens))
 
-    def refill(row, cache):
-        nonlocal next_id
-        if next_id >= len(queue):
-            return cache, False
-        # cold-start the row: feed the prompt through the decode path
-        prompt = queue[next_id]
-        active[row] = next_id
-        buffers[row] = list(prompt)
-        remaining[row] = args.new_tokens
-        next_id += 1
-        return cache, True
-
-    for row in range(b):
-        cache, _ = refill(row, cache)
-
-    # consume prompts in ONE parallel chunked prefill pass (row-synchronous:
-    # rows with shorter prompts re-feed their last token — fine for a demo
-    # scheduler, and identical to what a per-token warmup loop would feed)
-    max_prompt = max(len(q) for q in queue)
-    prompt_mat = jnp.asarray(
-        [[buffers[r][min(t, len(buffers[r]) - 1)] if buffers[r] else 0
-          for t in range(max_prompt)]
-         for r in range(b)], jnp.int32)
-    prefill = jax.jit(make_prefill(model), donate_argnums=(2,))
-    logits_all, cache = prefill(params, prompt_mat, cache)
-    logits = logits_all[:, -1]
-
-    while any(a is not None for a in active):
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        toks = np.asarray(tok)
-        for r in range(b):
-            if active[r] is None:
-                continue
-            buffers[r].append(int(toks[r]))
-            decoded += 1
-            remaining[r] -= 1
-            if remaining[r] <= 0:
-                results[active[r]] = buffers[r]
-                active[r] = None
-                cache, ok = refill(r, cache)
-        if all(a is None for a in active):
-            break
-        logits, cache = step(params, tok, cache)
-
-    dt = time.perf_counter() - t0
-    print(f"served {len(results)} requests, {decoded} tokens "
-          f"in {dt:.2f}s  ({decoded / dt:.1f} tok/s, batch={b}, "
-          f"arch={args.arch}, policy={args.policy})")
-    for rid in sorted(results)[:4]:
-        print(f"  req {rid}: {results[rid][:16]} ...")
+    rep = res.report
+    print(f"served {rep['served_requests']} requests, "
+          f"{rep['generated_tokens']} tokens in "
+          f"{rep['virtual_makespan_s']:.2f}s virtual  "
+          f"({rep['tokens_per_s']:.1f} tok/s, occupancy "
+          f"{rep['chunk_occupancy']:.2f}, slots={args.slots}, "
+          f"arch={args.arch}, policy={args.policy}, "
+          f"recompiles={rep['recompiles_after_warmup']})")
+    for rid in sorted(res.tokens)[:4]:
+        print(f"  req {rid}: {res.tokens[rid][:16].tolist()} ...")
 
 
 if __name__ == "__main__":

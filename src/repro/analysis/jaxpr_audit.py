@@ -2,9 +2,12 @@
 
 Builds the jaxpr of every serving program — each `BucketedViTEngine` bucket
 program across the sweep policies (frozen arm at every `DEFAULT_BUCKETS`
-geometry, live A/B arm at one), and the LM `prefill` + scan-fused decode loop
-— via `jax.make_jaxpr` over `ShapeDtypeStruct`s (no compile, no execution)
-and checks the contracts PRs 3-5 otherwise enforce only at runtime:
+geometry, live A/B arm at one), the LM `prefill` + scan-fused decode loop,
+and the continuous-batching `BucketedLMEngine` program set (bucket-shaped
+prefill, scan-fused decode chunk, admit/evict slot scatters — surfaced by
+the engine as `engine.programs`) — via `jax.make_jaxpr` over
+`ShapeDtypeStruct`s (no compile, no execution) and checks the contracts
+PRs 3-5 otherwise enforce only at runtime:
 
 =====  ==========================================================
 JX001  host callback / debug print primitive in a serving program
@@ -294,8 +297,59 @@ def audit_lm_serving(batch=2, prompt_len=13, gen_len=8):
     return findings, audited
 
 
+def audit_lm_continuous(n_slots=2, prompt_bucket=8, max_len=24, chunk=4):
+    """Audit the `BucketedLMEngine` continuous-batching program set.
+
+    The engine surfaces its raw traced fns as `engine.programs` (prefill,
+    decode_chunk, admit, evict) and its declared donations as
+    `engine.donate_argnums` precisely so this pass can audit what serving
+    jits. The WHOLE set is deterministic serving (greedy argmax — no
+    sampling arm), so JX006 applies to every program, and the cache pytree
+    is donated at every point it is consumed (the slot array is the one
+    buffer continuous batching rewrites on every admit/evict/chunk), so
+    JX005 verifies each program's declared donation actually aliases.
+    """
+    from repro.core.policy import STAGE1
+    from repro.serve.lm import BucketedLMEngine
+
+    findings, audited = [], []
+    for name, policy in (("dense", None), ("stage1", STAGE1)):
+        model = _tiny_lm(policy)
+        params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        params = jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype), params)
+        engine = BucketedLMEngine(model, params, n_slots=n_slots,
+                                  prompt_buckets=(prompt_bucket,),
+                                  chunk=chunk, max_len=max_len)
+        cache = jax.eval_shape(lambda: model.init_cache(n_slots, max_len))
+        row = jax.eval_shape(lambda: model.init_cache(1, max_len))
+        toks = jax.ShapeDtypeStruct((n_slots,), jnp.int32)
+        ptoks = jax.ShapeDtypeStruct((1, prompt_bucket), jnp.int32)
+        length = jax.ShapeDtypeStruct((1,), jnp.int32)
+        first = jax.ShapeDtypeStruct((1,), jnp.int32)
+        slot = jax.ShapeDtypeStruct((), jnp.int32)
+        args_by_program = {
+            "prefill": (params, ptoks, length, row),
+            "decode_chunk": (params, toks, cache),
+            "admit": (cache, toks, row, first, slot),
+            "evict": (cache, slot),
+        }
+        for pname, args in args_by_program.items():
+            fn = engine.programs[pname]
+            where = f"lm/{name}/continuous/{pname}"
+            closed = jax.make_jaxpr(fn)(*args)
+            findings += audit_closed_jaxpr(closed, where)
+            audited.append(AuditedProgram(where, len(closed.jaxpr.eqns)))
+            donate_key = "decode" if pname == "decode_chunk" else pname
+            findings += check_donation(fn,
+                                       engine.donate_argnums[donate_key],
+                                       args, f"{where}/donation")
+    return findings, audited
+
+
 def run(base_cfg=None):
     """The full pass: (findings, audited-program inventory)."""
     f_vit, a_vit = audit_vit_serving(base_cfg)
     f_lm, a_lm = audit_lm_serving()
-    return f_vit + f_lm, a_vit + a_lm
+    f_lmc, a_lmc = audit_lm_continuous()
+    return f_vit + f_lm + f_lmc, a_vit + a_lm + a_lmc

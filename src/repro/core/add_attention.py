@@ -49,19 +49,28 @@ def _featurize(q, k, feature="binary"):
 
 
 def binary_linear_attention(q, k, v, *, causal=False, chunk=128, train=True,
-                            feature="binary", return_state=False):
+                            feature="binary", return_state=False,
+                            lengths=None):
     """q, k: (B, H, N, Dk); v: (B, H, N, Dv) → (B, H, N, Dv).
 
     With return_state=True (causal only) also returns the final recurrent
     carry {"kv", "ksum", "vsum", "count"} in the init_decode_state layout —
     the chunked-prefill handoff into the O(1) decode path.
+
+    lengths (B,) int32, causal only: per-row valid prompt length for
+    end-padded batches. Keys/values at positions >= lengths[b] are masked out
+    of the carry and the counts, so the returned state is exactly the state
+    of the unpadded row — outputs at padded positions are garbage (they are
+    never read: padding sits strictly in every real position's causal
+    future).
     """
     if causal:
         return _causal_chunked(q, k, v, chunk=chunk, train=train,
-                               feature=feature, return_state=return_state)
-    if return_state:
-        raise ValueError("return_state requires causal=True (there is no "
-                         "recurrent carry in the bidirectional form)")
+                               feature=feature, return_state=return_state,
+                               lengths=lengths)
+    if return_state or lengths is not None:
+        raise ValueError("return_state/lengths require causal=True (there is "
+                         "no recurrent carry in the bidirectional form)")
     return _bidirectional(q, k, v, train=train, feature=feature)
 
 
@@ -77,7 +86,7 @@ def _bidirectional(q, k, v, train=True, feature="binary"):
 
 
 def _causal_chunked(q, k, v, *, chunk=128, train=True, feature="binary",
-                    return_state=False):
+                    return_state=False, lengths=None):
     b, h, n, dk_dim = q.shape
     dv = v.shape[-1]
     if n % chunk != 0:
@@ -87,7 +96,14 @@ def _causal_chunked(q, k, v, *, chunk=128, train=True, feature="binary",
         v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
     nc = q.shape[-2] // chunk
     bq, bk, dk = _featurize(q, k, feature)
-    if q.shape[-2] != n:
+    if lengths is not None:
+        # Per-row valid prompt lengths (bucketed end-padded prefill): masked
+        # key positions would featurize to nonzero codes and poison the carry.
+        valid = (jnp.arange(q.shape[-2])[None, :]
+                 < lengths[:, None]).astype(q.dtype)[:, None, :, None]
+        bk = bk * valid
+        v = v * valid
+    elif q.shape[-2] != n:
         # Padded key positions would featurize to nonzero codes (sign(0)=+1,
         # elu(0)+1=1) and poison the carry; zero them out. Valid outputs are
         # untouched (padding is strictly in the causal future of every real
@@ -135,19 +151,29 @@ def _causal_chunked(q, k, v, *, chunk=128, train=True, feature="binary",
     out = out[:, :, :n]
     if not return_state:
         return out
-    # count is the number of *real* tokens (the scan's cnt includes padding).
-    state = {"kv": kv_f, "ksum": ksum_f, "vsum": vsum_f,
-             "count": jnp.asarray(float(n), q.dtype)}
+    # count is the number of *real* tokens per row (the scan's cnt includes
+    # padding). Per-row so a packed decode batch can hold slots at different
+    # positions (continuous batching).
+    if lengths is not None:
+        count = lengths.astype(q.dtype)
+    else:
+        count = jnp.full((b,), float(n), q.dtype)
+    state = {"kv": kv_f, "ksum": ksum_f, "vsum": vsum_f, "count": count}
     return out, state
 
 
 def init_decode_state(batch, heads, dk, dv, dtype=jnp.float32):
-    """O(1) recurrent state for autoregressive decode (replaces the KV cache)."""
+    """O(1) recurrent state for autoregressive decode (replaces the KV cache).
+
+    Every leaf — including "count" — carries the batch axis, so admitting or
+    evicting one request from a packed decode batch is a single-axis
+    gather/scatter over the whole pytree (serve.lm.BucketedLMEngine).
+    """
     return {
         "kv": jnp.zeros((batch, heads, dk, dv), dtype),
         "ksum": jnp.zeros((batch, heads, dk), dtype),
         "vsum": jnp.zeros((batch, heads, dv), dtype),
-        "count": jnp.zeros((), dtype),
+        "count": jnp.zeros((batch,), dtype),
     }
 
 
@@ -163,7 +189,7 @@ def binary_linear_attention_step(q_t, k_t, v_t, state, feature="binary"):
     vsum = state["vsum"] + v_t
     count = state["count"] + 1.0
     num = jnp.einsum("bhd,bhde->bhe", bq, kv) + d * vsum
-    den = jnp.einsum("bhd,bhd->bh", bq, ksum) + d * count
+    den = jnp.einsum("bhd,bhd->bh", bq, ksum) + d * count[:, None]
     out = num / (den[..., None] + 1e-6)
     new_state = {"kv": kv, "ksum": ksum, "vsum": vsum, "count": count}
     return out, new_state

@@ -64,9 +64,9 @@ CACHE_RULES = {
     "conv": ("batch", None, None),
     "x_prev": ("batch", None),
     "h": ("batch", None),
-    "slot_pos": (None,),
-    "pos": (),
-    "count": (),
+    "slot_pos": ("batch", None),
+    "pos": ("batch",),
+    "count": ("batch",),
 }
 
 

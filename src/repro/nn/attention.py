@@ -232,6 +232,10 @@ class Attention:
         return L.call_linear(self.o_proj, params["o"], out, impl, tune)
 
     # -- decode --------------------------------------------------------------
+    # Every cache leaf — positions included — carries the batch axis, so a
+    # packed decode batch can hold requests at different positions and
+    # admitting/evicting one is a single-axis gather/scatter over the pytree
+    # (serve.lm.BucketedLMEngine's continuous batching).
     def init_cache(self, batch, max_len, dtype=jnp.bfloat16):
         if self.mode in ("linear", "binary_linear"):
             state = la.init_decode_state(batch, self.h, self.dh, self.dh, jnp.float32)
@@ -248,14 +252,14 @@ class Attention:
                 "v": jnp.zeros((batch, self.hkv, length, self.dh), jnp.int8),
                 "k_scale": jnp.zeros((batch, self.hkv, length), jnp.float32),
                 "v_scale": jnp.zeros((batch, self.hkv, length), jnp.float32),
-                "slot_pos": jnp.full((length,), -1, jnp.int32),
-                "pos": jnp.zeros((), jnp.int32),
+                "slot_pos": jnp.full((batch, length), -1, jnp.int32),
+                "pos": jnp.zeros((batch,), jnp.int32),
             }
         return {
             "k": jnp.zeros((batch, self.hkv, length, self.dh), dtype),
             "v": jnp.zeros((batch, self.hkv, length, self.dh), dtype),
-            "slot_pos": jnp.full((length,), -1, jnp.int32),
-            "pos": jnp.zeros((), jnp.int32),
+            "slot_pos": jnp.full((batch, length), -1, jnp.int32),
+            "pos": jnp.zeros((batch,), jnp.int32),
         }
 
     @staticmethod
@@ -266,12 +270,18 @@ class Attention:
         return q, scale.astype(jnp.float32)
 
     # -- parallel prefill ----------------------------------------------------
-    def prefill(self, params, x, cache, positions=None):
+    def prefill(self, params, x, cache, positions=None, lengths=None):
         """Whole-prompt pass against a *fresh* cache. x: (B, N, d_model).
 
         Returns (y (B, N, d_model), cache) where cache is decode-ready: the
         linear modes hand over the chunked pass's final recurrent carry (one
         O(N) pass instead of N decode steps); dense modes bulk-write K/V.
+
+        lengths (B,) int32: per-row valid prompt length for bucket-padded
+        prompts (tokens at positions >= lengths[b] are end-padding). The
+        returned cache row is exactly the unpadded row's state; outputs at
+        padded positions are garbage (never read — padding is strictly in
+        every real position's causal future).
         """
         cfg = self.cfg
         b, n, _ = x.shape
@@ -283,7 +293,8 @@ class Attention:
             out, state = la.binary_linear_attention(
                 q.astype(jnp.float32), kf.astype(jnp.float32),
                 vf.astype(jnp.float32), causal=self.causal, chunk=min(128, n),
-                train=False, feature=self.feature, return_state=True)
+                train=False, feature=self.feature, return_state=True,
+                lengths=lengths)
             out = out.astype(x.dtype)
             # Accumulate into the caller's carry instead of replacing it: the
             # recurrent state is additive, so this is exact for the fresh
@@ -293,13 +304,17 @@ class Attention:
             new_cache = {name: cache[name] + state[name] for name in state}
             if "conv" in cache:
                 new_cache["conv"] = L.trailing_window(
-                    vraw, self.dwconv.width - 1, cache["conv"].dtype)
+                    vraw, self.dwconv.width - 1, cache["conv"].dtype,
+                    lengths=lengths)
         else:
             out = softmax_attention(q, k, v, causal=self.causal,
                                     window=self.window,
                                     softcap=cfg.attn_logit_softcap,
                                     chunk=min(512, n))
             length = cache["k"].shape[2]
+            if lengths is not None and n > length:
+                raise ValueError("lengths-masked prefill requires the prompt "
+                                 f"to fit the cache ({n} > {length})")
             m = min(n, length)          # ring buffer keeps the last `length`
             pos_abs = jnp.arange(n - m, n, dtype=jnp.int32)
             slots = jnp.mod(pos_abs, length)
@@ -315,9 +330,17 @@ class Attention:
                     k_tail.astype(cache["k"].dtype))
                 cv = cache["v"].at[:, :, slots].set(
                     v_tail.astype(cache["v"].dtype))
-            slot_pos = cache["slot_pos"].at[slots].set(pos_abs)
+            pos_rows = jnp.broadcast_to(pos_abs[None], (b, m))
+            if lengths is not None:
+                # Padded rows stay invalid (-1); decode overwrites them
+                # write-before-read as pos reaches each slot.
+                pos_rows = jnp.where(pos_abs[None] < lengths[:, None],
+                                     pos_rows, -1)
+            slot_pos = cache["slot_pos"].at[:, slots].set(pos_rows)
+            pos_new = (lengths.astype(jnp.int32) if lengths is not None
+                       else jnp.full((b,), n, jnp.int32))
             new_cache = {"k": ck, "v": cv, "slot_pos": slot_pos,
-                         "pos": jnp.asarray(n, jnp.int32)}
+                         "pos": pos_new}
             if quantized:
                 new_cache["k_scale"] = cache["k_scale"].at[:, :, slots].set(kscale)
                 new_cache["v_scale"] = cache["v_scale"].at[:, :, slots].set(vscale)
@@ -325,12 +348,16 @@ class Attention:
         return self.o_proj(params["o"], out), new_cache
 
     def decode_step(self, params, x_t, cache):
-        """x_t: (B, d_model) one token. Returns (y_t, cache)."""
+        """x_t: (B, d_model) one token. Returns (y_t, cache).
+
+        Positions are per-row ((B,) in the cache), so a packed continuous
+        decode batch can hold requests at different depths.
+        """
         b = x_t.shape[0]
         pos = cache["count"].astype(jnp.int32) if "count" in cache else cache["pos"]
-        positions = jnp.broadcast_to(pos, (b, 1))
+        positions = pos[:, None]
         if self.cfg.rope == "mrope":
-            positions = jnp.broadcast_to(pos, (b, 3, 1))
+            positions = jnp.broadcast_to(pos[:, None, None], (b, 3, 1))
         x = x_t[:, None, :]
         q = self.q_proj(params["q"], x).reshape(b, 1, self.h, self.dh)
         k = self.k_proj(params["k"], x).reshape(b, 1, self.hkv, self.dh)
@@ -361,23 +388,24 @@ class Attention:
         else:
             quantized = self.cfg.kv_cache_dtype == "int8"
             length = cache["k"].shape[2]
-            slot = jnp.mod(pos, length)
+            slot = jnp.mod(pos, length)                     # (B,)
+            rows = jnp.arange(b)
+            # Per-row ring-buffer write: row i lands at its own slot[i]
+            # (advanced-index scatter; the advanced axes move to the front,
+            # which matches the (B, Hkv, Dh) value layout).
             if quantized:
                 kq, kscale = self._quantize_kv(k)
                 vq, vscale = self._quantize_kv(v)
-                ck = jax.lax.dynamic_update_slice(cache["k"], kq, (0, 0, slot, 0))
-                cv = jax.lax.dynamic_update_slice(cache["v"], vq, (0, 0, slot, 0))
-                ks = jax.lax.dynamic_update_slice(cache["k_scale"], kscale,
-                                                  (0, 0, slot))
-                vs = jax.lax.dynamic_update_slice(cache["v_scale"], vscale,
-                                                  (0, 0, slot))
+                ck = cache["k"].at[rows, :, slot].set(kq[:, :, 0])
+                cv = cache["v"].at[rows, :, slot].set(vq[:, :, 0])
+                ks = cache["k_scale"].at[rows, :, slot].set(kscale[:, :, 0])
+                vs = cache["v_scale"].at[rows, :, slot].set(vscale[:, :, 0])
             else:
-                ck = jax.lax.dynamic_update_slice(
-                    cache["k"], k.astype(cache["k"].dtype), (0, 0, slot, 0))
-                cv = jax.lax.dynamic_update_slice(
-                    cache["v"], v.astype(cache["v"].dtype), (0, 0, slot, 0))
-            slot_pos = jax.lax.dynamic_update_slice(cache["slot_pos"],
-                                                    pos[None], (slot,))
+                ck = cache["k"].at[rows, :, slot].set(
+                    k[:, :, 0].astype(cache["k"].dtype))
+                cv = cache["v"].at[rows, :, slot].set(
+                    v[:, :, 0].astype(cache["v"].dtype))
+            slot_pos = cache["slot_pos"].at[rows, slot].set(pos)
             qg = q.reshape(b, self.hkv, self.h // self.hkv, self.dh)
             # preferred_element_type avoids materializing an f32 copy of the
             # whole cache (the dominant decode temp buffer otherwise). For the
@@ -391,10 +419,10 @@ class Attention:
                 s = s * ks[:, :, None, :]
             if self.cfg.attn_logit_softcap:
                 s = jnp.tanh(s / self.cfg.attn_logit_softcap) * self.cfg.attn_logit_softcap
-            valid = (slot_pos >= 0) & (slot_pos <= pos)
+            valid = (slot_pos >= 0) & (slot_pos <= pos[:, None])
             if self.window:
-                valid &= (pos - slot_pos) < self.window
-            s = jnp.where(valid[None, None, None, :], s, -jnp.inf)
+                valid &= (pos[:, None] - slot_pos) < self.window
+            s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
             p = jax.nn.softmax(s, axis=-1)
             if quantized:
                 p = p * vs[:, :, None, :]          # fold V scales into probs
@@ -515,10 +543,10 @@ class MLAttention:
         return {
             "c_kv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
             "k_rope": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype),
-            "pos": jnp.zeros((), jnp.int32),
+            "pos": jnp.zeros((batch,), jnp.int32),
         }
 
-    def prefill(self, params, x, cache, positions=None):
+    def prefill(self, params, x, cache, positions=None, lengths=None):
         """Whole-prompt pass against a fresh cache → (y, decode-ready cache).
 
         Linear modes hand over the chunked pass's final recurrent carry; the
@@ -532,7 +560,7 @@ class MLAttention:
                 q.astype(jnp.float32), k.astype(jnp.float32),
                 v.astype(jnp.float32), causal=self.cfg.causal,
                 chunk=min(128, n), train=False, feature=self.feature,
-                return_state=True)
+                return_state=True, lengths=lengths)
             out = out.astype(x.dtype)
             # Additive carry: accumulate into the donated cache (see the
             # GQA prefill above — exact for zeros, JX005-consumable).
@@ -545,8 +573,12 @@ class MLAttention:
             cr = jax.lax.dynamic_update_slice(
                 cache["k_rope"], k_rope[:, 0].astype(cache["k_rope"].dtype),
                 (0, 0, 0))
-            new_cache = {"c_kv": ck, "k_rope": cr,
-                         "pos": jnp.asarray(n, jnp.int32)}
+            # Padded latent rows beyond lengths[b] hold garbage but stay
+            # masked (valid = slot <= pos) until decode overwrites them
+            # write-before-read as pos reaches each row.
+            pos_new = (lengths.astype(jnp.int32) if lengths is not None
+                       else jnp.full((b,), n, jnp.int32))
+            new_cache = {"c_kv": ck, "k_rope": cr, "pos": pos_new}
         out = out.transpose(0, 2, 1, 3).reshape(b, n, self.h * m.v_head_dim)
         return self.o_proj(params["o"], out), new_cache
 
@@ -554,7 +586,7 @@ class MLAttention:
         b = x_t.shape[0]
         m = self.m
         pos = cache["count"].astype(jnp.int32) if "count" in cache else cache["pos"]
-        positions = jnp.broadcast_to(pos, (b, 1))
+        positions = pos[:, None]
         x = x_t[:, None, :]
         q_nope, q_rope, c_kv, k_rope = self._project(params, x, positions)
 
@@ -571,10 +603,12 @@ class MLAttention:
                 v[:, :, 0].astype(jnp.float32), cache, self.feature)
             out = out.astype(x_t.dtype)
         else:
-            ck = jax.lax.dynamic_update_slice(
-                cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, pos, 0))
-            cr = jax.lax.dynamic_update_slice(
-                cache["k_rope"], k_rope[:, 0].astype(cache["k_rope"].dtype), (0, pos, 0))
+            rows = jnp.arange(b)
+            # Per-row latent write at each row's own position.
+            ck = cache["c_kv"].at[rows, pos].set(
+                c_kv[:, 0].astype(cache["c_kv"].dtype))
+            cr = cache["k_rope"].at[rows, pos].set(
+                k_rope[:, 0, 0].astype(cache["k_rope"].dtype))
             # Absorbed form: W_uk into q, W_uv out of the latent context.
             w_kv = params["kv_up"].get("kernel")
             if w_kv is None:  # shift-packed projections: reconstruct
@@ -593,8 +627,8 @@ class MLAttention:
             s += jnp.einsum("bhp,blp->bhl", q_rope[:, :, 0].astype(dt), cr,
                             preferred_element_type=jnp.float32)
             s *= self.qk_head ** -0.5
-            valid = jnp.arange(ck.shape[1]) <= pos
-            s = jnp.where(valid[None, None], s, -jnp.inf)
+            valid = jnp.arange(ck.shape[1])[None, :] <= pos[:, None]
+            s = jnp.where(valid[:, None, :], s, -jnp.inf)
             p = jax.nn.softmax(s, axis=-1)
             ctx = jnp.einsum("bhl,blr->bhr", p.astype(dt), ck,
                              preferred_element_type=jnp.float32)

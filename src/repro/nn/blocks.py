@@ -158,29 +158,35 @@ class TransformerBlock:
             cache["feed"] = self.feed.init_cache(batch, max_len, dtype)
         return cache
 
-    def prefill(self, params, x, cache, positions=None):
+    def prefill(self, params, x, cache, positions=None, lengths=None):
         """Whole-prompt pass against a fresh cache. x: (B, N, d_model) →
         (y (B, N, d_model), decode-ready cache). Same residual wiring as
-        __call__; the mixer fills its decode state in one chunked pass."""
+        __call__; the mixer fills its decode state in one chunked pass.
+        lengths (B,) int32 marks per-row valid prompt length for
+        bucket-padded prompts (end padding never enters the handed-over
+        state)."""
         h = self.norm1(params["norm1"], x)
         mix, mixer_cache = self.mixer.prefill(params["mixer"], h,
-                                              cache["mixer"], positions=positions)
+                                              cache["mixer"],
+                                              positions=positions,
+                                              lengths=lengths)
         new_cache = {"mixer": mixer_cache}
         if self.parallel:
-            ff, fc = self._feed_prefill(params, h, cache)
+            ff, fc = self._feed_prefill(params, h, cache, lengths)
             if fc is not None:
                 new_cache["feed"] = fc
             return x + mix + ff, new_cache
         x = x + mix
         h2 = self.norm2(params["norm2"], x)
-        ff, fc = self._feed_prefill(params, h2, cache)
+        ff, fc = self._feed_prefill(params, h2, cache, lengths)
         if fc is not None:
             new_cache["feed"] = fc
         return x + ff, new_cache
 
-    def _feed_prefill(self, params, h, cache):
+    def _feed_prefill(self, params, h, cache, lengths=None):
         if hasattr(self.feed, "prefill"):
-            return self.feed.prefill(params["feed"], h, cache["feed"])
+            return self.feed.prefill(params["feed"], h, cache["feed"],
+                                     lengths=lengths)
         if self._feed_has_aux:
             y, _ = self.feed(params["feed"], h, train=False)
             return y, None

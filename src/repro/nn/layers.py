@@ -251,13 +251,23 @@ class DWConv1D:
         return y + params["bias"].astype(self.dtype), window[:, 1:]
 
 
-def trailing_window(x, w, dtype=None):
+def trailing_window(x, w, dtype=None, lengths=None):
     """Last `w` steps of x (B, N, D), front-zero-padded to exactly `w`.
 
     Warms a causal-conv decode state from a full-sequence (prefill) pass: the
     zeros for N < w reproduce the conv's implicit causal left-padding.
+
+    lengths (B,) int32: per-row valid length for end-padded batches — row b's
+    window ends at position lengths[b]-1, with the same zero left-padding for
+    lengths[b] < w.
     """
     b, n, d = x.shape
+    if lengths is not None:
+        idx = lengths[:, None] - w + jnp.arange(w, dtype=lengths.dtype)[None, :]
+        tail = jnp.take_along_axis(x, jnp.clip(idx, 0, n - 1)[:, :, None],
+                                   axis=1)
+        tail = jnp.where(idx[:, :, None] >= 0, tail, 0)
+        return tail.astype(dtype or x.dtype)
     tail = x[:, max(0, n - w):]
     if n < w:
         tail = jnp.pad(tail, ((0, 0), (w - n, 0), (0, 0)))

@@ -204,7 +204,8 @@ class LanguageModel:
                             for blk in self.rem_blocks]
         return cache
 
-    def prefill(self, params, inputs, cache, positions=None, last_only=False):
+    def prefill(self, params, inputs, cache, positions=None, last_only=False,
+                lengths=None):
         """Parallel prefill: one chunked full-sequence pass that fills a fresh
         decode cache (linear-state carries, dense KV rows, conv windows).
 
@@ -215,6 +216,13 @@ class LanguageModel:
         last_only=True applies norm+head to the final position only (logits
         (B, 1, vocab)) — serving never reads the other N-1 rows, and for real
         vocabularies the full (B, N, vocab) buffer dominates prefill cost.
+        lengths (B,) int32: per-row valid prompt length for bucket-padded
+        prompts (the serving engine pads every prompt up to a shape bucket).
+        End padding never enters the handed-over cache, and with
+        last_only=True the returned logits row is each row's *last real*
+        token — so a bucketed prefill is bit-comparable to an exact-length
+        one up to XLA reduction-shape effects, and identical across calls of
+        the same bucket.
         """
         if self.cfg.is_encoder:
             raise ValueError("prefill() is a decode-path API; "
@@ -230,7 +238,7 @@ class LanguageModel:
                 new_caches = []
                 for j, blk in enumerate(self.blocks):
                     x, c = blk.prefill(layer_params[j], x, layer_cache[j],
-                                       positions=positions)
+                                       positions=positions, lengths=lengths)
                     new_caches.append(c)
                 return x, tuple(new_caches)
 
@@ -245,7 +253,8 @@ class LanguageModel:
                 for j, blk in enumerate(self.blocks):
                     pj = jax.tree_util.tree_map(lambda a: a[i], params["layers"][j])
                     cj = jax.tree_util.tree_map(lambda a: a[i], cache["layers"][j])
-                    x, c = blk.prefill(pj, x, cj, positions=positions)
+                    x, c = blk.prefill(pj, x, cj, positions=positions,
+                                       lengths=lengths)
                     stack_c[j].append(c)
             new_cache = {"layers": [
                 jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *cs)
@@ -254,12 +263,16 @@ class LanguageModel:
             new_rem = []
             for j, blk in enumerate(self.rem_blocks):
                 x, c = blk.prefill(params["rem"][j], x, cache["rem"][j],
-                                   positions=positions)
+                                   positions=positions, lengths=lengths)
                 new_rem.append(c)
             new_cache["rem"] = new_rem
 
         if last_only:
-            x = x[:, -1:]
+            if lengths is not None:
+                x = jnp.take_along_axis(
+                    x, (lengths - 1)[:, None, None].astype(jnp.int32), axis=1)
+            else:
+                x = x[:, -1:]
         x = self.final_norm(params["final_norm"], x)
         if self.head is not None:
             logits = self.head(params["head"], x)

@@ -98,11 +98,13 @@ class RGLRUBlock:
     def init_cache(self, batch, max_len=None, dtype=jnp.bfloat16):
         return {"h": jnp.zeros((batch, self.dr), jnp.float32),
                 "conv": jnp.zeros((batch, self.cfg.conv1d_width - 1, self.dr), dtype),
-                "pos": jnp.zeros((), jnp.int32)}
+                "pos": jnp.zeros((batch,), jnp.int32)}
 
-    def prefill(self, params, x, cache, positions=None):
+    def prefill(self, params, x, cache, positions=None, lengths=None):
         """Whole-prompt pass against a fresh cache → (y, decode-ready cache).
-        One associative scan replaces N sequential decode steps."""
+        One associative scan replaces N sequential decode steps. lengths (B,)
+        marks per-row valid prompt length for end-padded batches: the handed-
+        over state (h, conv window) is taken at each row's last real token."""
         n = x.shape[1]
         gate = jax.nn.gelu(self.in_gate(params["in_gate"], x))
         ux = self.in_x(params["in_x"], x)
@@ -110,10 +112,18 @@ class RGLRUBlock:
         a, b = self._gates(params, u)
         h = _rglru_scan(a, b, h0=cache["h"])
         y = self.out(params["out"], h.astype(self.dt) * gate)
-        new_cache = {"h": h[:, -1],
+        if lengths is None:
+            h_last = h[:, -1]
+            new_pos = cache["pos"] + n
+        else:
+            h_last = jnp.take_along_axis(
+                h, (lengths - 1)[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+            new_pos = cache["pos"] + lengths.astype(jnp.int32)
+        new_cache = {"h": h_last,
                      "conv": L.trailing_window(ux, self.cfg.conv1d_width - 1,
-                                               cache["conv"].dtype),
-                     "pos": cache["pos"] + n}
+                                               cache["conv"].dtype,
+                                               lengths=lengths),
+                     "pos": new_pos}
         return y, new_cache
 
     def decode_step(self, params, x_t, cache):
@@ -133,6 +143,18 @@ class RGLRUBlock:
 def _token_shift(x):
     """x_{t-1} with zero at t=0. x: (B, N, D)."""
     return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+
+def _last_valid(x, lengths):
+    """(last real token of x (B, N, D), per-row effective length (B,)).
+
+    lengths=None means the whole sequence is valid (x[:, -1], N).
+    """
+    if lengths is None:
+        return x[:, -1], x.shape[1]
+    last = jnp.take_along_axis(
+        x, (lengths - 1)[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+    return last, lengths.astype(jnp.int32)
 
 
 class RWKV6TimeMix:
@@ -212,14 +234,25 @@ class RWKV6TimeMix:
         y = y.reshape(b, n, -1)
         return y * params["ln_scale"] + params["ln_bias"]
 
-    def _wkv(self, params, x, S0=None):
+    def _wkv(self, params, x, S0=None, lengths=None):
         """Full-sequence WKV pass. Returns (out (B,N,H,hs) pre-norm f32,
-        gate g, final state S) so prefill can reuse the training dataflow."""
+        gate g, final state S) so prefill can reuse the training dataflow.
+
+        lengths (B,): per-row valid length for end-padded batches. Padded
+        steps are made state-identity (decay w=1, kv-outer-product 0), so the
+        final S is exactly the unpadded row's state; padded outputs are
+        garbage and never read.
+        """
         b, n, d = x.shape
         r, k, v, g, w = self._streams(params, x, _token_shift(x))
         r, k, v = map(self._heads, (r, k, v))              # (B,N,H,hs)
         w = self._heads(w.astype(jnp.float32))
         u = params["u"].astype(jnp.float32)
+        if lengths is not None:
+            valid = (jnp.arange(n)[None, :] < lengths[:, None])[:, :, None, None]
+            k = jnp.where(valid, k, 0.0)
+            v = jnp.where(valid, v, 0.0)
+            w = jnp.where(valid, w, 1.0)   # log-decay 0 ⇒ chunked path exact too
         if S0 is None:
             S0 = jnp.zeros((b, self.h, self.hs, self.hs), jnp.float32)
 
@@ -248,16 +281,18 @@ class RWKV6TimeMix:
     def init_cache(self, batch, max_len=None, dtype=jnp.bfloat16):
         return {"S": jnp.zeros((batch, self.h, self.hs, self.hs), jnp.float32),
                 "x_prev": jnp.zeros((batch, self.cfg.d_model), dtype),
-                "pos": jnp.zeros((), jnp.int32)}
+                "pos": jnp.zeros((batch,), jnp.int32)}
 
-    def prefill(self, params, x, cache, positions=None):
+    def prefill(self, params, x, cache, positions=None, lengths=None):
         """Whole-prompt pass against a fresh cache → (y, decode-ready cache).
-        One (optionally chunked) WKV scan replaces N decode steps."""
-        out, g, S = self._wkv(params, x, S0=cache["S"])
+        One (optionally chunked) WKV scan replaces N decode steps. lengths
+        (B,): per-row valid prompt length for end-padded batches."""
+        out, g, S = self._wkv(params, x, S0=cache["S"], lengths=lengths)
         y = self.o_proj(params["o"],
                         self._group_norm(params, out).astype(self.dt) * g)
-        new_cache = {"S": S, "x_prev": x[:, -1].astype(cache["x_prev"].dtype),
-                     "pos": cache["pos"] + x.shape[1]}
+        x_last, n_eff = _last_valid(x, lengths)
+        new_cache = {"S": S, "x_prev": x_last.astype(cache["x_prev"].dtype),
+                     "pos": cache["pos"] + n_eff}
         return y, new_cache
 
     def decode_step(self, params, x_t, cache):
@@ -383,12 +418,13 @@ class RWKV6ChannelMix:
 
     def init_cache(self, batch, max_len=None, dtype=jnp.bfloat16):
         return {"x_prev": jnp.zeros((batch, self.cfg.d_model), dtype),
-                "pos": jnp.zeros((), jnp.int32)}
+                "pos": jnp.zeros((batch,), jnp.int32)}
 
-    def prefill(self, params, x, cache, positions=None):
+    def prefill(self, params, x, cache, positions=None, lengths=None):
         y = self._forward(params, x, _token_shift(x))
-        new_cache = {"x_prev": x[:, -1].astype(cache["x_prev"].dtype),
-                     "pos": cache["pos"] + x.shape[1]}
+        x_last, n_eff = _last_valid(x, lengths)
+        new_cache = {"x_prev": x_last.astype(cache["x_prev"].dtype),
+                     "pos": cache["pos"] + n_eff}
         return y, new_cache
 
     def decode_step(self, params, x_t, cache):

@@ -14,7 +14,12 @@ as mode='chunk' vs 'fused_recurrent'):
   donated. The host sees exactly one dispatch for the entire generation.
 
 `make_serve_step` remains the single-token unit the decode dry-run cells
-lower and the continuous-batching example drives.
+lower. Continuous batching lives one layer up, in `serve.lm.BucketedLMEngine`
+(token-level slot array; requests join a running decode batch at chunk
+boundaries) driven by `serve.frontend.serve_lm_trace` — that is the path
+`examples/serve_lm.py` demonstrates and benchmarks/bench_lm_traffic.py gates.
+`generate` below stays the one-shot whole-batch entry point and doubles as
+the independent greedy oracle the continuous property tier compares against.
 
 Note on token-choice MoE feeds: prefill routes the whole prompt as one group
 while sequential decode routes per token, so capacity-limited dropping can

@@ -41,9 +41,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serve.metrics import latency_summary, padding_waste
-from repro.serve.scheduler import MicroBatchScheduler
-from repro.serve.traffic import Trace
+from repro.serve.metrics import latency_summary, padding_waste, rate_per_s
+from repro.serve.scheduler import MicroBatchScheduler, SlotScheduler
+from repro.serve.traffic import Trace, lm_new_tokens, lm_prompt_tokens
 
 _INF = float("inf")
 
@@ -445,4 +445,409 @@ def traffic_sweep(base_cfg=None, *, scenario="poisson",
         if "shiftadd" in record["policies"]:
             record["shiftadd_vs_dense_p99"] = (
                 record["policies"]["shiftadd"]["latency"]["p99_s"] / d99)
+    return record
+
+
+# ---------------------------------------------------------------------------
+# Token-level LM serving: continuous batching under the same virtual clock
+# ---------------------------------------------------------------------------
+# Same determinism model as the vision path above: engine execution is REAL
+# (every prefill / decode chunk runs through the warmed BucketedLMEngine and
+# per-request tokens+logits are reassembled from the slot rows), scheduling
+# TIME is VIRTUAL (a calibrated service model advances per-engine timelines).
+# The event grid is the engine's CHUNK BOUNDARY: finished slots are evicted,
+# queued requests are admitted into free slots (joining the RUNNING decode
+# batch — the continuous-batching tentpole), and one decode chunk advances
+# every slot. `mode="static"` is the fixed-batch refill baseline: the SAME
+# engine, but a request may only be admitted when EVERY slot is free (gang
+# refill), so the continuous-vs-static comparison is pure scheduling — zero
+# extra compiled programs, identical per-request logits (decode is row-wise
+# per slot; admission timing cannot move a logit, only a latency).
+
+
+def calibrate_lm_service(pool, iters=3):
+    """LM timing law: median prefill seconds per prompt bucket + median
+    decode-chunk seconds, measured on engine 0 of a WARM pool (all engines
+    serve identical programs). Uses the real serving entry points
+    (`admit` / `decode_chunk`), so the host-transfer cost serving actually
+    pays is included. The pool is reset afterwards — calibration leaves no
+    slot state and compiles nothing."""
+    eng = pool.engines[0]
+    pre = {b: [] for b in eng.prompt_buckets}
+    chunks = []
+    for _ in range(max(1, int(iters)) + 1):    # round 0 = touch, discarded
+        for b in eng.prompt_buckets:
+            prompt = np.zeros((b,), np.int32)
+            t0 = time.perf_counter()
+            eng.admit(0, prompt)
+            pre[b].append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            eng.decode_chunk()
+            chunks.append(time.perf_counter() - t0)
+            eng.evict(0)
+    pool.reset()
+
+    def median(xs):
+        xs = sorted(xs)
+        return xs[len(xs) // 2]
+
+    n_b = len(eng.prompt_buckets)
+    return {"prefill_s": {b: median(xs[1:]) for b, xs in pre.items()},
+            "chunk_s": median(chunks[n_b:])}
+
+
+@dataclasses.dataclass
+class LMTrafficResult:
+    report: dict                 # the BENCH_lm_traffic.json arm record
+    requests: list               # per-request dicts (rid order, shed incl.)
+    tokens: dict                 # rid → np.ndarray (new_tokens,) int32
+    logits: dict                 # rid → np.ndarray (new_tokens, vocab)
+    dispatches: list             # admission log (the dispatch signature)
+
+    def dispatch_signature(self):
+        """Hashable view of the routing: which request was admitted where
+        and when — identical across replays of the same seeded trace."""
+        return tuple(
+            (d["rid"], round(d["admit_s"], 9), d["engine"], d["slot"],
+             d["bucket"])
+            for d in self.dispatches)
+
+
+def serve_lm_trace(pool, scheduler: SlotScheduler, trace: Trace, svc, *,
+                   mode="continuous", new_token_range=(4, 24),
+                   collect_logits=True) -> LMTrafficResult:
+    """Serve a seeded token trace through the slot scheduler and LM pool.
+
+    `Request.size` is the prompt length; the payload helpers in
+    serve.traffic derive the prompt tokens and decode length from the
+    request seed. svc is `calibrate_lm_service`'s output. mode:
+    "continuous" admits into any free slot at any chunk boundary;
+    "static" only refills when ALL of an engine's slots are free.
+    """
+    assert mode in ("continuous", "static"), mode
+    engines = pool.engines
+    vocab = engines[0].model.cfg.vocab_size
+    prefill_s, chunk_s = svc["prefill_s"], svc["chunk_s"]
+    K = pool.chunk
+    t = [0.0] * len(engines)
+    slot_state = [[None] * e.n_slots for e in engines]
+    arrivals = list(trace.requests)
+    ai = 0
+    traces_at_start = pool.trace_count
+    dispatches, shed, done = [], {}, {}
+    tokens_out, logits_out = {}, {}
+    n_chunks = occupancy_sum = 0
+
+    def finish(rec, now):
+        req = rec["req"]
+        done[req.rid] = {
+            "rid": req.rid, "klass": req.klass, "prompt_len": req.size,
+            "new_tokens": rec["target"], "arrival_s": req.arrival_s,
+            "deadline_s": req.deadline_s, "admit_s": rec["admit_s"],
+            "ttft_s": rec["ttft_s"], "completion_s": now,
+            "latency_s": now - req.arrival_s,
+            "met": now <= req.deadline_s, "shed": False,
+            "engine": rec["engine"], "slot": rec["slot"],
+            "bucket": rec["bucket"]}
+        tokens_out[req.rid] = np.concatenate(rec["toks"])
+        if collect_logits:
+            logits_out[req.rid] = np.concatenate(rec["logits"], axis=0)
+
+    while True:
+        if (ai >= len(arrivals) and not scheduler.has_queued()
+                and all(r is None for st in slot_state for r in st)):
+            break
+        e = min(range(len(engines)), key=lambda i: t[i])
+        now = t[e]
+        while ai < len(arrivals) and arrivals[ai].arrival_s <= now:
+            req = arrivals[ai]
+            if not scheduler.offer(req, req.arrival_s):
+                shed[req.rid] = req
+            ai += 1
+        eng, st = engines[e], slot_state[e]
+
+        # 1) chunk boundary: evict finished slots (they free NOW).
+        for s_i, rec in enumerate(st):
+            if rec is not None and rec["gen"] >= rec["target"]:
+                eng.evict(s_i)
+                finish(rec, now)
+                st[s_i] = None
+
+        # 2) admissions — continuous: any free slot; static: gang refill.
+        free = [i for i, r in enumerate(st) if r is None]
+        gang_ok = mode != "static" or len(free) == eng.n_slots
+        while free and gang_ok and scheduler.has_queued():
+            req, _enq = scheduler.next_request(now)
+            slot = free.pop(0)
+            admit_s = now
+            first, first_logits = eng.admit(
+                slot, lm_prompt_tokens(req, vocab), rid=req.rid)
+            bucket = eng.bucket_for(min(req.size, eng.prompt_buckets[-1]))
+            now += prefill_s[bucket]
+            target = lm_new_tokens(req, *new_token_range)
+            st[slot] = {
+                "req": req, "admit_s": admit_s, "ttft_s": now - req.arrival_s,
+                "target": target, "gen": 1, "engine": e, "slot": slot,
+                "bucket": bucket,
+                "toks": [np.asarray([first], np.int32)],
+                "logits": [first_logits[None]] if collect_logits else None}
+            dispatches.append({
+                "rid": req.rid, "admit_s": admit_s, "engine": e, "slot": slot,
+                "bucket": bucket, "prompt_len": req.size,
+                "new_tokens": target})
+
+        # 3) decode one chunk over ALL slots, or jump to the next arrival.
+        alive = [i for i, r in enumerate(st) if r is not None]
+        if alive:
+            toks_seq, logits_seq = eng.decode_chunk()
+            for s_i in alive:
+                rec = st[s_i]
+                take = min(K, rec["target"] - rec["gen"])
+                if take > 0:
+                    rec["toks"].append(toks_seq[:take, s_i].copy())
+                    if collect_logits:
+                        rec["logits"].append(logits_seq[:take, s_i].copy())
+                    rec["gen"] += take
+            n_chunks += 1
+            occupancy_sum += len(alive)
+            t[e] = now + chunk_s
+        elif ai < len(arrivals):
+            t[e] = max(now, arrivals[ai].arrival_s)
+        else:
+            t[e] = _INF
+
+    # -- per-request records, rid order -------------------------------------
+    requests_out, latencies, ttfts, waits = [], [], [], []
+    met = late = gen_total = 0
+    for req in trace.requests:
+        if req.rid in shed:
+            requests_out.append({
+                "rid": req.rid, "klass": req.klass, "prompt_len": req.size,
+                "arrival_s": req.arrival_s, "shed": True, "met": False})
+            continue
+        r = done[req.rid]
+        requests_out.append(r)
+        latencies.append(r["latency_s"])
+        ttfts.append(r["ttft_s"])
+        waits.append(r["admit_s"] - req.arrival_s)
+        gen_total += r["new_tokens"]
+        met += int(r["met"])
+        late += int(not r["met"])
+
+    total = len(trace.requests)
+    makespan = max((r["completion_s"] for r in done.values()), default=0.0)
+    n_slots_total = len(engines) * pool.n_slots
+    report = {
+        "scenario": trace.scenario,
+        "seed": trace.seed,
+        "mode": mode,
+        "engines": len(engines),
+        "n_slots": pool.n_slots,
+        "chunk": K,
+        "prompt_buckets": list(pool.prompt_buckets),
+        "service_model": {"prefill_s": {str(b): s for b, s in
+                                        prefill_s.items()},
+                          "chunk_s": chunk_s},
+        "requests": total,
+        "served_requests": total - len(shed),
+        "shed_requests": len(shed),
+        "deadline_miss_rate": (late + len(shed)) / total if total else 0.0,
+        "deadline_met_requests": met,
+        "generated_tokens": gen_total,
+        "virtual_makespan_s": makespan,
+        "tokens_per_s": rate_per_s(gen_total, makespan),
+        "latency": latency_summary(latencies),
+        "ttft": latency_summary(ttfts),
+        "queue_wait": latency_summary(waits),
+        "decode_chunks": n_chunks,
+        "chunk_occupancy": (occupancy_sum / (n_chunks * pool.n_slots)
+                            if n_chunks else 0.0),
+        "recompiles_after_warmup": pool.trace_count - traces_at_start,
+        "prefill_trace_count": pool.prefill_trace_count,
+        "expected_prefill_traces": len(engines) * len(pool.prompt_buckets),
+    }
+    return LMTrafficResult(report=report, requests=requests_out,
+                           tokens=tokens_out, logits=logits_out,
+                           dispatches=dispatches)
+
+
+def lm_serial_oracle(pool, trace, rids, *, slots=None,
+                     new_token_range=(4, 24), collect_logits=True):
+    """Batch=1 oracle: the SAME engine serves each request ALONE, one at a
+    time. Decode being row-wise per slot, the packed continuous run must
+    reproduce these tokens and logits bit for bit — the LM serving statement
+    of the batch-invariance contract (co-residency, join round and neighbor
+    eviction can never move a logit).
+
+    `slots` (rid → slot, default 0) pins each solo run to the slot the
+    packed run used. The pin matters: XLA may compile a row's reductions
+    differently per row *position* at some batch shapes (observed at
+    n_slots=2 on CPU — ULP-level, slot-1 rows only), so comparing packed
+    slot 1 against solo slot 0 would charge that kernel artifact to the
+    scheduler. Holding the slot fixed isolates the property actually being
+    gated; slot-*permutation* invariance is pinned separately by the
+    property tier at the gated geometries. Returns (tokens, logits) dicts
+    keyed by rid; the pool is reset before and after."""
+    eng = pool.engines[0]
+    pool.reset()
+    vocab = eng.model.cfg.vocab_size
+    K = eng.chunk
+    slots = slots or {}
+    toks_out, logits_out = {}, {}
+    for req in trace.requests:
+        if req.rid not in rids:
+            continue
+        slot = slots.get(req.rid, 0)
+        first, first_logits = eng.admit(slot, lm_prompt_tokens(req, vocab),
+                                        rid=req.rid)
+        target = lm_new_tokens(req, *new_token_range)
+        toks = [np.asarray([first], np.int32)]
+        lgs = [first_logits[None]]
+        gen = 1
+        while gen < target:
+            ts, ls = eng.decode_chunk()
+            take = min(K, target - gen)
+            toks.append(ts[:take, slot].copy())
+            if collect_logits:
+                lgs.append(ls[:take, slot].copy())
+            gen += take
+        eng.evict(slot)
+        toks_out[req.rid] = np.concatenate(toks)
+        if collect_logits:
+            logits_out[req.rid] = np.concatenate(lgs, axis=0)
+    pool.reset()
+    return toks_out, logits_out
+
+
+def lm_traffic_sweep(*, scenario="poisson", policies=("stage1", "shiftadd"),
+                     n_requests=60, seed=0, n_replicas=1, n_slots=4,
+                     prompt_buckets=(4, 8, 16), chunk=4, layers=2,
+                     d_model=64, vocab_size=256, utilization=1.5,
+                     new_token_range=(4, 24), max_queue_requests=None,
+                     calibrate_iters=3, verify_replay=True,
+                     verify_serial_oracle=True) -> dict:
+    """Continuous vs static (gang-refill) LM decode on one seeded trace per
+    policy arm; returns the BENCH_lm_traffic.json record.
+
+    Both modes run on the SAME warmed pool (mode is host-side scheduling
+    only), so the tokens/s comparison carries zero compile-count or
+    program-identity confounds — `recompiles_after_warmup` must be 0 on
+    both arms and `prefill_trace_count` must equal engines × buckets.
+    The default load (`utilization=1.5` of the calibrated full-occupancy
+    request capacity) is deliberately an overload: continuous admission
+    then keeps slots busy where gang refill drains them, which is the
+    structural win the gate (benchmarks/check_lm_traffic.py) asserts as
+    continuous tokens/s >= static tokens/s.
+
+    verify_replay: serve the continuous trace twice and record whether the
+    dispatch signature, tokens, and logits replay bit-identically.
+    verify_serial_oracle: re-serve every request alone at batch=1 through
+    the same engine and record `one_vs_n_bit_identical_logits` (plus the
+    compared count, so a partial comparison cannot impersonate a full one).
+    """
+    import math
+
+    from repro.configs.base import ModelConfig
+    from repro.core.policy import SHIFTADD, STAGE1
+    from repro.serve.replicas import make_lm_replicas
+
+    from repro.serve.traffic import default_budgets, make_trace
+
+    POLICY_BY_NAME = {"stage1": STAGE1, "shiftadd": SHIFTADD}
+    g_lo, g_hi = new_token_range
+    record = {
+        "backend": jax.default_backend(),
+        "model": f"lm({layers}L,{d_model}d,vocab{vocab_size})",
+        "n_replicas": n_replicas,
+        "n_slots": n_slots,
+        "chunk": chunk,
+        "prompt_buckets": list(prompt_buckets),
+        "utilization": utilization,
+        "new_token_range": list(new_token_range),
+        "policies": {},
+    }
+    for name in policies:
+        from repro.nn.model import LanguageModel
+
+        cfg = ModelConfig(name=f"lm-traffic-{name}", family="dense",
+                          policy=POLICY_BY_NAME[name], n_layers=layers,
+                          d_model=d_model, n_heads=2, n_kv_heads=2,
+                          d_ff=2 * d_model, vocab_size=vocab_size,
+                          dtype="float32", scan_layers=True, remat="none",
+                          moe_primitives_capacity=2.0)
+        model = LanguageModel(cfg)
+        params = model.init(jax.random.PRNGKey(seed))
+        pool = make_lm_replicas(model, params, n_replicas=n_replicas,
+                                n_slots=n_slots,
+                                prompt_buckets=prompt_buckets,
+                                chunk=chunk).warmup()
+        svc = calibrate_lm_service(pool, iters=calibrate_iters)
+
+        # Offered load calibration: at full occupancy one engine completes
+        # ~n_slots requests per (mean prefill + mean decode chunks), so the
+        # request capacity is slots/(per-request service). make_trace takes
+        # a token (image) rate with mean request size ~4 tokens (the
+        # geometric(0.25) prompt-length mean).
+        mean_prompt = 4.0
+        chunks_mean = math.ceil(max(0.5 * (g_lo + g_hi) - 1, 0) / chunk)
+        bucket_mean = pool.engines[0].bucket_for(int(mean_prompt))
+        req_service = (svc["prefill_s"][bucket_mean]
+                       + chunks_mean * svc["chunk_s"])
+        capacity_req_s = n_replicas * n_slots / req_service
+        bmax = pool.prompt_buckets[-1]
+        chunks_max = math.ceil(max(g_hi - 1, 0) / chunk)
+        budgets = default_budgets(svc["prefill_s"][bmax]
+                                  + chunks_max * svc["chunk_s"])
+        trace = make_trace(scenario, n_requests, seed,
+                           target_images_per_s=(utilization * capacity_req_s
+                                                * mean_prompt),
+                           budgets_s=budgets, max_size=bmax)
+
+        def sched():
+            return SlotScheduler(max_queue_requests=max_queue_requests)
+
+        collect = verify_replay or verify_serial_oracle
+        res_c = serve_lm_trace(pool, sched(), trace, svc, mode="continuous",
+                               new_token_range=new_token_range,
+                               collect_logits=collect)
+        pool.reset()
+        res_s = serve_lm_trace(pool, sched(), trace, svc, mode="static",
+                               new_token_range=new_token_range,
+                               collect_logits=False)
+        pool.reset()
+        rep = {"continuous": res_c.report, "static": res_s.report,
+               "trace": trace.summary(),
+               "continuous_vs_static_tokens_per_s": (
+                   res_c.report["tokens_per_s"]
+                   / res_s.report["tokens_per_s"]
+                   if res_s.report["tokens_per_s"] else float("inf"))}
+        if verify_replay:
+            res2 = serve_lm_trace(pool, sched(), trace, svc,
+                                  mode="continuous",
+                                  new_token_range=new_token_range,
+                                  collect_logits=True)
+            pool.reset()
+            rep["replay_identical_dispatch"] = (
+                res_c.dispatch_signature() == res2.dispatch_signature())
+            rep["replay_bit_identical_tokens"] = (
+                set(res_c.tokens) == set(res2.tokens) and all(
+                    np.array_equal(res_c.tokens[r], res2.tokens[r])
+                    for r in res_c.tokens))
+            rep["replay_bit_identical_logits"] = (
+                set(res_c.logits) == set(res2.logits) and all(
+                    np.array_equal(res_c.logits[r], res2.logits[r])
+                    for r in res_c.logits))
+        if verify_serial_oracle:
+            slot_of = {r["rid"]: r["slot"] for r in res_c.requests
+                       if not r.get("shed")}
+            toks1, lgs1 = lm_serial_oracle(
+                pool, trace, set(res_c.tokens), slots=slot_of,
+                new_token_range=new_token_range)
+            common = set(res_c.logits) & set(lgs1)
+            rep["one_vs_n_compared"] = len(common)
+            rep["one_vs_n_bit_identical_tokens"] = bool(toks1) and all(
+                np.array_equal(res_c.tokens[r], toks1[r]) for r in toks1)
+            rep["one_vs_n_bit_identical_logits"] = bool(common) and all(
+                np.array_equal(res_c.logits[r], lgs1[r]) for r in common)
+        record["policies"][name] = rep
     return record

@@ -1,0 +1,268 @@
+"""BucketedLMEngine: token-level continuous batching for LM decode.
+
+The decode state is a packed *slot array*: one fixed-shape cache pytree of
+`n_slots` rows (recurrent carries, conv windows, KV/latent rows — every leaf
+carries the batch axis, including the per-slot positions, see
+nn.attention/nn.recurrent init_cache) plus the current last token per slot
+and a host-side alive mask. Because the linear-attention carry is a fixed
+(d_k × d_v) block and the positions are per-row, admitting or evicting one
+request is a single-axis gather/scatter over the pytree — requests join a
+*running* decode batch at chunk boundaries instead of waiting for it to
+drain (ROADMAP item 2; the chunk-vs-recurrent duality flash-linear-attention
+exposes makes the prefill→slot handoff one O(P) pass).
+
+Mirrors serve.vision.BucketedViTEngine: a fixed set of jitted, donated,
+bucket-shaped programs compiled once by `warmup()` and keyed by a
+`trace_count` compile counter the no-recompilation gates assert on:
+
+- one lengths-masked prefill per *prompt-length bucket* (batch=1: the prompt
+  is padded up to the bucket; `lengths` keeps the padding out of the carry),
+- ONE decode-chunk program — a `lax.scan` of `chunk` greedy decode steps
+  over all slots at once,
+- one admit scatter, one evict scatter (reset a slot to its fresh-cache
+  row), and the fresh-row/fresh-batch cache initializers.
+
+Decode is greedy (argmax) — the per-request bit-identical replay and
+batch-1-vs-packed oracle gates (benchmarks/check_lm_traffic.py) are
+statements about deterministic programs. Every per-slot computation in
+decode_step is row-wise (the MoE feed is batch-grouped but drop-free at
+generous capacity — see serve.decode's MoE note), so a request's logits are
+bit-identical no matter who it shares the batch with or when its neighbors
+are admitted/evicted — the property tier in tests/test_lm_continuous.py
+pins exactly that. Slot *position* is pinned too at the gated geometries,
+but is the one axis XLA does not guarantee universally: some batch shapes
+compile per-row-position reduction variants (ULP-level; observed at
+n_slots=2 on CPU), which is why the serial oracle holds the slot fixed.
+"""
+from __future__ import annotations
+
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DEFAULT_PROMPT_BUCKETS = (8, 16, 32)
+DEFAULT_CHUNK = 8
+
+
+def _batch_axes(model, max_len):
+    """Per-leaf batch-axis pytree for the decode cache.
+
+    Found structurally: the one axis whose extent differs between
+    init_cache(2) and init_cache(1). "layers" leaves carry a leading
+    n_cycles stacking axis, so the batch axis is not a fixed position.
+    """
+    two = jax.eval_shape(lambda: model.init_cache(2, max_len))
+    one = jax.eval_shape(lambda: model.init_cache(1, max_len))
+
+    def axis(a, b):
+        diff = [i for i, (x, y) in enumerate(zip(a.shape, b.shape)) if x != y]
+        if len(diff) != 1:
+            raise ValueError(
+                f"cache leaf {a.shape} vs {b.shape}: expected exactly one "
+                "batch axis — is some leaf still batch-less?")
+        return diff[0]
+
+    return jax.tree_util.tree_map(axis, two, one)
+
+
+class BucketedLMEngine:
+    """Continuous-batching LM decode over a packed slot array.
+
+    Host-visible state: `tokens` (n_slots,) current last token per slot,
+    `cache` the packed pytree, `alive`/`slot_rid` host-side masks. All
+    device mutation goes through the jitted programs below; the scheduler
+    (serve.scheduler.SlotScheduler) decides *which* request a free slot
+    gets, the frontend (serve.frontend.serve_lm_trace) decides *when*.
+    """
+
+    def __init__(self, model, params, *, n_slots=4,
+                 prompt_buckets=DEFAULT_PROMPT_BUCKETS, chunk=DEFAULT_CHUNK,
+                 max_len=None):
+        assert n_slots >= 1 and chunk >= 1
+        assert len(prompt_buckets) > 0 and min(prompt_buckets) >= 1
+        self.model = model
+        self.params = params
+        self.n_slots = int(n_slots)
+        self.chunk = int(chunk)
+        self.prompt_buckets = tuple(sorted(set(int(b) for b in prompt_buckets)))
+        self.max_len = int(max_len or (self.prompt_buckets[-1] + 128))
+        if self.max_len < self.prompt_buckets[-1]:
+            raise ValueError("max_len must cover the largest prompt bucket")
+        self._axes = _batch_axes(model, self.max_len)
+
+        self.trace_count = 0          # every jit (re)trace, all programs
+        self.prefill_trace_count = 0  # bucket-shaped prefill traces only
+        self._counter_lock = threading.Lock()
+
+        # Host-side slot lifecycle (the device never sees "alive": dead rows
+        # hold the fresh zero cache and compute harmless garbage — decode is
+        # row-wise, so they cannot perturb live rows).
+        self.alive = [False] * self.n_slots
+        self.slot_rid = [None] * self.n_slots
+
+        def _count(prefill=False):
+            # Runs at trace time, not execution — the compile counter the
+            # recompiles-after-warmup gate asserts on.
+            with self._counter_lock:
+                self.trace_count += 1  # lint: allow(LT004 trace-time compile counter, guarded by gates)
+                if prefill:
+                    self.prefill_trace_count += 1  # lint: allow(LT004 trace-time compile counter, guarded by gates)
+
+        mdl = model
+        S, K, L = self.n_slots, self.chunk, self.max_len
+        axes = self._axes
+
+        def init_row():
+            _count()
+            return mdl.init_cache(1, L)
+
+        def init_batch():
+            _count()
+            return mdl.init_cache(S, L)
+
+        def prefill(p, toks, length, row):
+            _count(prefill=True)
+            logits, row = mdl.prefill(p, toks, row, last_only=True,
+                                      lengths=length)
+            logits = logits[:, 0]                       # (1, V)
+            first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return first, logits, row
+
+        def decode_chunk(p, toks, cache):
+            _count()
+
+            def step(carry, _):
+                t, c = carry
+                logits, c = mdl.decode_step(p, t, c)
+                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                return (nxt, c), (nxt, logits)
+
+            (t, cache), (toks_seq, logits_seq) = jax.lax.scan(
+                step, (toks, cache), None, length=K)
+            return t, cache, toks_seq, logits_seq      # (K,S), (K,S,V)
+
+        def admit(cache, toks, row, first, slot):
+            _count()
+
+            def put(leaf, r, ax):
+                return jax.lax.dynamic_update_slice_in_dim(
+                    leaf, r.astype(leaf.dtype), slot, axis=ax)
+
+            cache = jax.tree_util.tree_map(put, cache, row, axes)
+            toks = jax.lax.dynamic_update_slice(toks, first, (slot,))
+            return cache, toks
+
+        def evict(cache, slot):
+            _count()
+            fresh = mdl.init_cache(1, L)
+
+            def put(leaf, r, ax):
+                return jax.lax.dynamic_update_slice_in_dim(
+                    leaf, r.astype(leaf.dtype), slot, axis=ax)
+
+            return jax.tree_util.tree_map(put, cache, fresh, axes)
+
+        # Cache pytrees are donated everywhere they are consumed (the linear
+        # prefill *accumulates* into its donated row — JX005-consumable).
+        self.donate_argnums = {"prefill": (3,), "decode": (1, 2),
+                               "admit": (0, 1), "evict": (0,)}
+        self._init_row = jax.jit(init_row)
+        self._init_batch = jax.jit(init_batch)
+        self._prefill = jax.jit(prefill, donate_argnums=(3,))
+        self._decode = jax.jit(decode_chunk, donate_argnums=(1, 2))
+        self._admit = jax.jit(admit, donate_argnums=(0, 1))
+        self._evict = jax.jit(evict, donate_argnums=(0,))
+        # Raw traced fns, surfaced for the serving-contract jaxpr audit.
+        self.programs = {"prefill": prefill, "decode_chunk": decode_chunk,
+                         "admit": admit, "evict": evict}
+
+        self.cache = self._init_batch()
+        self.tokens = jnp.zeros((S,), jnp.int32)
+
+    # -- shape bookkeeping ---------------------------------------------------
+    @property
+    def expected_programs(self) -> int:
+        """Program count after warmup: one prefill per prompt bucket plus
+        decode_chunk, admit, evict, and the two cache initializers."""
+        return len(self.prompt_buckets) + 5
+
+    def bucket_for(self, n: int) -> int:
+        """Smallest prompt bucket that fits n (oversize prompts are clipped
+        to the largest bucket by admit — context-window semantics)."""
+        for b in self.prompt_buckets:
+            if n <= b:
+                return b
+        return self.prompt_buckets[-1]
+
+    def warmup(self):
+        """Compile every program once so serving never pays a trace."""
+        for b in self.prompt_buckets:
+            row = self._init_row()
+            toks = jnp.zeros((1, b), jnp.int32)
+            first, logits, row_cache = self._prefill(
+                self.params, toks, jnp.asarray([b], jnp.int32), row)
+        self.cache, self.tokens = self._admit(
+            self.cache, self.tokens, row_cache, first,
+            jnp.asarray(0, jnp.int32))
+        out = self._decode(self.params, self.tokens, self.cache)
+        self.cache = self._evict(out[1], jnp.asarray(0, jnp.int32))
+        jax.block_until_ready(self.cache)
+        self.reset()
+        return self
+
+    def reset(self):
+        """Fresh slot array (no new programs — reuses the jitted init)."""
+        self.cache = self._init_batch()
+        self.tokens = jnp.zeros((self.n_slots,), jnp.int32)
+        self.alive = [False] * self.n_slots
+        self.slot_rid = [None] * self.n_slots
+        return self
+
+    def free_slots(self):
+        return [i for i, a in enumerate(self.alive) if not a]
+
+    # -- slot lifecycle ------------------------------------------------------
+    def admit(self, slot, prompt, rid=None):
+        """Prefill `prompt` (1D int tokens) and scatter the resulting cache
+        row + first generated token into `slot` of the running batch.
+
+        Returns (first_token int, first_logits (V,) np.ndarray) — the greedy
+        argmax over the prompt's last real position and the distribution it
+        came from (the first row of the request's logit stream).
+        """
+        assert not self.alive[slot], f"slot {slot} is occupied"
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        bmax = self.prompt_buckets[-1]
+        if prompt.shape[0] > bmax:
+            prompt = prompt[-bmax:]          # clip to the context window
+        n = prompt.shape[0]
+        bucket = self.bucket_for(n)
+        padded = np.zeros((1, bucket), np.int32)
+        padded[0, :n] = prompt
+        row = self._init_row()
+        first, logits, row_cache = self._prefill(
+            self.params, jnp.asarray(padded), jnp.asarray([n], jnp.int32), row)
+        self.cache, self.tokens = self._admit(
+            self.cache, self.tokens, row_cache, first,
+            jnp.asarray(slot, jnp.int32))
+        self.alive[slot] = True
+        self.slot_rid[slot] = rid
+        return int(first[0]), np.asarray(logits[0])
+
+    def evict(self, slot):
+        """Scatter the fresh-cache row back into `slot` (jitted; the next
+        admit fully overwrites it anyway, but a clean row keeps dead-slot
+        compute finite and the state replay-exact)."""
+        self.cache = self._evict(self.cache, jnp.asarray(slot, jnp.int32))
+        self.alive[slot] = False
+        self.slot_rid[slot] = None
+
+    def decode_chunk(self):
+        """Advance every slot by `chunk` greedy tokens (dead slots compute
+        garbage that never leaves their row). Returns (tokens (K, S) int32,
+        logits (K, S, V) float32) as host arrays."""
+        self.tokens, self.cache, toks_seq, logits_seq = self._decode(
+            self.params, self.tokens, self.cache)
+        return np.asarray(toks_seq), np.asarray(logits_seq)

@@ -83,6 +83,16 @@ def latency_summary(samples_s) -> dict:
     return out
 
 
+def rate_per_s(count, seconds) -> float:
+    """Throughput `count / seconds`; 0 when no time elapsed (an empty or
+    shed-everything run must still serialize). Used for goodput (images/s)
+    and decode throughput (tokens/s) so both serving benches derive their
+    headline rate the same way."""
+    if seconds <= 0:
+        return 0.0
+    return float(count) / float(seconds)
+
+
 def padding_waste(real_images: int, padded_images: int) -> float:
     """Fraction of served batch slots that were padding: 1 - real/padded.
     0 when nothing was served (no slots, no waste)."""

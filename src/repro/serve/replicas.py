@@ -127,6 +127,75 @@ class DataParallelReplicas(_ReplicaBase):
         return fut
 
 
+class LMReplicas:
+    """R independent `BucketedLMEngine`s for token-level continuous batching.
+
+    Unlike the ViT pool, LM engines are STATEFUL — the packed slot array
+    (recurrent carries / KV rows / conv windows) lives in the engine — so
+    replicas never share one: each replica owns its slot array and its own
+    compiled programs. The frontend (`serve.frontend.serve_lm_trace`)
+    advances one virtual timeline per engine and hands a queued request to
+    whichever engine reaches a chunk boundary with a free slot first
+    (ties: lowest index) — deterministic dispatch, same contract as the
+    vision pool's lowest-idle-slot rule.
+    """
+
+    arm = "lm"
+
+    def __init__(self, model, params, n_replicas=1, **engine_kw):
+        from repro.serve.lm import BucketedLMEngine
+
+        assert n_replicas >= 1
+        self.engines = [BucketedLMEngine(model, params, **engine_kw)
+                        for _ in range(n_replicas)]
+        self.n_replicas = n_replicas
+
+    @property
+    def prompt_buckets(self):
+        return self.engines[0].prompt_buckets
+
+    @property
+    def chunk(self) -> int:
+        return self.engines[0].chunk
+
+    @property
+    def n_slots(self) -> int:
+        return self.engines[0].n_slots
+
+    @property
+    def trace_count(self) -> int:
+        return sum(e.trace_count for e in self.engines)
+
+    @property
+    def prefill_trace_count(self) -> int:
+        return sum(e.prefill_trace_count for e in self.engines)
+
+    @property
+    def expected_programs(self) -> int:
+        return sum(e.expected_programs for e in self.engines)
+
+    def warmup(self):
+        for e in self.engines:
+            e.warmup()
+        return self
+
+    def reset(self):
+        """Fresh slot arrays everywhere (no new programs)."""
+        for e in self.engines:
+            e.reset()
+        return self
+
+    def close(self):
+        pass
+
+
+def make_lm_replicas(model, params, n_replicas=1, **engine_kw):
+    """LM pool factory, mirroring `make_replicas` for the vision arms.
+    engine_kw forwards to BucketedLMEngine (n_slots, prompt_buckets, chunk,
+    max_len)."""
+    return LMReplicas(model, params, n_replicas=n_replicas, **engine_kw)
+
+
 def make_replicas(model, params, n_replicas=2, arm="auto", **kw):
     """arm: 'thread' | 'sharded' | 'auto' (sharded when the backend has
     ≥ n_replicas devices and n_replicas > 1, else thread)."""

@@ -210,3 +210,64 @@ class MicroBatchScheduler:
         return Batch(parts=tuple(parts), n_images=total,
                      bucket=self.bucket_for(total), formed_s=now,
                      reason=reason)
+
+
+class SlotScheduler:
+    """Token-level sibling of MicroBatchScheduler for continuous LM decode.
+
+    Decode classes schedule *slots, not parts*: the unit of dispatch is one
+    request claiming one engine slot for its whole lifetime (prefill + all
+    its decode chunks), and the decision point is every chunk boundary, when
+    the frontend asks which queued request a freed slot should get next.
+
+    Same deterministic contracts as the batch former: one FIFO queue per
+    deadline class, earliest-absolute-deadline among the class *heads*
+    (ties: class declaration order) picks the next request — so dispatch is
+    FIFO within a class and EDF across classes — and `offer` sheds whole
+    requests past `max_queue_requests` (bounded queues under overload).
+
+    Logit freedom holds at token level too: decode is row-wise per slot
+    (serve.lm.BucketedLMEngine's contract), so co-residency and admission
+    timing can never move a request's logits — only its latency. The
+    property tier in tests/test_lm_continuous.py pins this (slot placement
+    is deterministic and replay-gated; see lm_serial_oracle on why the
+    oracle additionally pins the slot index).
+    """
+
+    def __init__(self, *, max_queue_requests=None):
+        self.max_queue_requests = max_queue_requests
+        self._queues = {k: collections.deque() for k in DEADLINE_CLASSES}
+        self.queued_requests = 0
+        self.shed_requests = 0
+        self.admitted_requests = 0
+
+    def offer(self, req: Request, now: float) -> bool:
+        """Admit into the class queue or shed (whole requests only)."""
+        if (self.max_queue_requests is not None
+                and self.queued_requests + 1 > self.max_queue_requests):
+            self.shed_requests += 1
+            return False
+        self._queues[req.klass].append((req, now))
+        self.queued_requests += 1
+        self.admitted_requests += 1
+        return True
+
+    def has_queued(self) -> bool:
+        return self.queued_requests > 0
+
+    def _head_order(self):
+        heads = [(q[0][0].deadline_s, i, k)
+                 for i, k in enumerate(DEADLINE_CLASSES)
+                 if (q := self._queues[k])]
+        return [k for _, _, k in sorted(heads)]
+
+    def next_request(self, now: float):
+        """Pop the request the next free slot should serve: earliest
+        deadline among class heads (ties by class order), FIFO within a
+        class. Returns (Request, enqueued_s) or None."""
+        order = self._head_order()
+        if not order:
+            return None
+        req, enq = self._queues[order[0]].popleft()
+        self.queued_requests -= 1
+        return req, enq

@@ -167,6 +167,30 @@ def make_trace(scenario: str, n_requests: int, seed: int, *,
                  target_images_per_s=target_images_per_s)
 
 
+# ---------------------------------------------------------------------------
+# LM traffic: deterministic token payloads
+# ---------------------------------------------------------------------------
+# The SAME seeded traces serve the LM frontend (serve.frontend.serve_lm_trace):
+# `Request.size` is then the PROMPT LENGTH in tokens (the same mostly-short
+# geometric distribution; oversize requests exercise the engine's
+# context-window clipping instead of the vision split path) and the payload
+# seed deterministically derives both the prompt tokens and the decode
+# length — the same request always asks the same question and the same
+# amount of answer, so replays and the batch=1 serial oracle compare like
+# for like.
+
+def lm_prompt_tokens(req: Request, vocab_size: int) -> np.ndarray:
+    """Deterministic prompt for one request: (req.size,) int32 in [0, vocab)."""
+    rng = np.random.default_rng(req.seed)
+    return rng.integers(0, vocab_size, size=req.size).astype(np.int32)
+
+
+def lm_new_tokens(req: Request, lo: int, hi: int) -> int:
+    """Deterministic decode length (tokens to generate) in [lo, hi]."""
+    assert 1 <= lo <= hi, (lo, hi)
+    return int(lo + req.seed % (hi - lo + 1))
+
+
 def default_budgets(max_bucket_service_s: float,
                     multipliers=None) -> dict:
     """Per-class deadline budgets from the measured max-bucket service time.
