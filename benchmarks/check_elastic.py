@@ -1,0 +1,133 @@
+"""CI gate for the elastic-serving benchmark (vit-elastic job).
+
+    python benchmarks/check_elastic.py BENCH_elastic.json
+
+Fails (exit 1) unless the diurnal overload scenario shows exactly the
+story the control plane exists to tell:
+
+- the FIXED baseline missed deadlines (miss rate > 0 recorded) — the
+  trace genuinely overloads min-replicas at the peak; a feasible trace
+  would make the elastic arm's zero-miss vacuous,
+- the ELASTIC arm missed ZERO deadlines and shed ZERO requests across
+  that same peak, the injected kill, and the injected straggler,
+- ZERO recompiles after warmup across BOTH arms and BOTH pools (primary
+  + degrade), every reserve engine counted — the warm-pool invariant:
+  no scale-up, scale-down, kill, straggler eviction, or recovery may
+  trace a program,
+- the machinery was actually exercised: at least one scale-up, the kill
+  fired (kills >= 1), a replacement was attached after it
+  (scale_ups + recoveries >= 2 when faults are present), the straggler
+  was evicted, and at least one request degraded to the cheap arm,
+- seeded replay reproduced the full elastic signature (routing incl.
+  arm, scaling timeline, fault firings, degradation decisions) and every
+  logit bit for bit — missing replay fields fail, absence is not a pass.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+REPLAY_KEYS = ("replay_identical_events", "replay_bit_identical_logits")
+
+
+def gate_record(rec):
+    """Pure gate: record → list of failure strings (empty = pass)."""
+    failures = []
+    base, ela = rec.get("baseline"), rec.get("elastic")
+    if not base or not ela:
+        return ["record has no baseline+elastic pair"]
+
+    if base["deadline_miss_rate"] <= 0:
+        failures.append(
+            "baseline miss rate is 0 — the trace does not overload the "
+            "fixed min-replica pool, so the elastic zero-miss result is "
+            "vacuous (raise --utilization)")
+    if ela["deadline_miss_rate"] > 0:
+        failures.append(f"elastic miss rate "
+                        f"{ela['deadline_miss_rate']:.4f} > 0 — the control "
+                        f"plane failed to absorb the peak/faults")
+    if ela["shed_requests"] > 0:
+        failures.append(f"elastic arm shed {ela['shed_requests']} requests "
+                        f"— degradation should absorb overflow, not drop it")
+    total_recompiles = rec.get("recompiles_after_warmup",
+                               base["recompiles_after_warmup"]
+                               + ela["recompiles_after_warmup"])
+    if total_recompiles > 0:
+        failures.append(f"{total_recompiles} recompiles after warmup — a "
+                        f"scale/failure/degradation event traced a program "
+                        f"(warm-pool invariant broken)")
+
+    if ela["scale_ups"] < 1:
+        failures.append("no scale-ups — the autoscaler never grew the pool")
+    if ela["degraded_requests"] < 1:
+        failures.append("no degraded requests — the saturation ladder never "
+                        "engaged")
+    faults_planned = rec.get("faults", [])
+    if faults_planned:
+        if ela["kills"] < 1:
+            failures.append("a kill was scheduled but never fired")
+        if any(f["kind"] == "slowdown" for f in faults_planned) \
+                and ela["straggler_evictions"] < 1:
+            failures.append("a slowdown was scheduled but the straggler "
+                            "monitor never evicted the replica")
+        if ela["scale_ups"] + ela["recoveries"] < 2:
+            failures.append("no warm-pool re-admission after the fault "
+                            "(scale_ups + recoveries < 2)")
+
+    for key in REPLAY_KEYS:
+        if key not in rec:
+            failures.append(f"{key} missing — the benchmark did not verify "
+                            f"replay (determinism gates may not be skipped)")
+        elif not rec[key]:
+            failures.append(f"{key} is false — the elastic run is not "
+                            f"deterministic under replay")
+    return failures
+
+
+def main(rows) -> None:
+    """benchmarks/run.py harness mode: tiny verified record, gate verdict."""
+    import time
+
+    try:
+        from benchmarks import bench_elastic
+    except ImportError:          # standalone: benchmarks/ is sys.path[0]
+        import bench_elastic
+
+    t0 = time.time()
+    rec = bench_elastic.run(requests=60, image_size=16, layers=2, d_model=32,
+                            buckets=(1, 2, 4), verify_replay=True)
+    failures = gate_record(rec)
+    rows.append(("elastic_gate", (time.time() - t0) * 1e6,
+                 f"failures={len(failures)}"))
+
+
+def cli(argv):
+    if len(argv) != 2:
+        print(__doc__)
+        return 2
+    rec = json.load(open(argv[1]))
+    failures = gate_record(rec)
+    base, ela = rec.get("baseline"), rec.get("elastic")
+    if base and ela:
+        for arm, r in (("baseline", base), ("elastic", ela)):
+            print(f"{arm:>9}: p99 {r['latency']['p99_s'] * 1e3:.1f} ms  "
+                  f"miss {r['deadline_miss_rate']:.3f}  "
+                  f"shed {r['shed_requests']}  "
+                  f"recompiles {r['recompiles_after_warmup']}")
+        print(f"  elastic: ups {ela['scale_ups']} downs {ela['scale_downs']} "
+              f"kills {ela['kills']} evictions {ela['straggler_evictions']} "
+              f"recoveries {ela['recoveries']} "
+              f"degraded {ela['degraded_requests']} "
+              f"max_active {ela['max_active']}  replay [" + " ".join(
+                  f"{k.split('_', 1)[1]}={rec.get(k, 'absent')}"
+                  for k in REPLAY_KEYS) + "]")
+    for f in failures:
+        print(f"FAIL: {f}")
+    if failures:
+        return 1
+    print("elastic gate OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(cli(sys.argv))

@@ -2,7 +2,10 @@
 
 Builds the jaxpr of every serving program — each `BucketedViTEngine` bucket
 program across the sweep policies (frozen arm at every `DEFAULT_BUCKETS`
-geometry, live A/B arm at one), the LM `prefill` + scan-fused decode loop,
+geometry, live A/B arm at one), every reserve engine of the elastic warm
+pools (parked spares included, both the dense primary and the shiftadd
+degrade arm — the surface the zero-recompile invariant counts), the LM
+`prefill` + scan-fused decode loop,
 and the continuous-batching `BucketedLMEngine` program set (bucket-shaped
 prefill, scan-fused decode chunk, admit/evict slot scatters — surfaced by
 the engine as `engine.programs`) — via `jax.make_jaxpr` over
@@ -21,6 +24,8 @@ JX005  declared buffer donation not consumed by the lowering
 JX006  rng primitive on a deterministic `infer` path
 JX007  floating-point scatter-add on a deterministic path
        (nondeterministic accumulation order on parallel backends)
+JX008  a warm-pool reserve engine traces a different program than
+       engine 0 at the same bucket (replacement not a drop-in)
 =====  ==========================================================
 
 Each audit builds its OWN engines/models — never hand it a warmed engine
@@ -46,6 +51,7 @@ RULES = {
     "JX005": "declared buffer donation not consumed",
     "JX006": "rng primitive on a deterministic infer path",
     "JX007": "float scatter-add on a deterministic path",
+    "JX008": "program differs across warm-pool reserve engines",
 }
 
 CALLBACK_PRIMITIVES = frozenset({
@@ -239,6 +245,77 @@ def audit_vit_serving(base_cfg=None, policies=None, buckets=None):
 
 
 # ---------------------------------------------------------------------------
+# Entry-point inventory: elastic warm-pool reserve engines
+# ---------------------------------------------------------------------------
+
+def audit_elastic_serving(base_cfg=None, *, max_replicas=2, spares=1,
+                          buckets=None):
+    """Audit every reserve engine of the elastic warm pools, both arms.
+
+    The elastic control plane's zero-recompile invariant counts jit traces
+    over EVERY reserve engine — parked spares included — of BOTH pools
+    (dense primary, shiftadd degrade), so the audited surface here is
+    exactly that inventory: one entry per arm × reserve engine × bucket
+    (primary carries max_replicas + spares engines, the degrade arm one,
+    mirroring elastic_sweep). Each program gets the standard per-program
+    rules, plus JX008 — a cross-ENGINE extension of JX004's cross-bucket
+    signature check: every reserve engine of an arm must trace the same
+    dtype signature AND equation count per bucket, because a warm-pool
+    attach/kill replacement that serves a different program than the
+    replica it replaced would silently break both the zero-recompile gate
+    and bit-identical replay.
+    """
+    from repro.core.policy import DENSE
+    from repro.nn.vit import ShiftAddViT, ViTConfig
+    from repro.serve.elastic import ElasticWarmPool
+    from repro.serve.vision import DEFAULT_BUCKETS, build_policy_model
+
+    base_cfg = base_cfg or ViTConfig()
+    buckets = tuple(buckets or DEFAULT_BUCKETS)
+    findings, audited = [], []
+
+    dense_model = ShiftAddViT(dataclasses.replace(base_cfg, policy=DENSE))
+    dense_params = jax.eval_shape(dense_model.init, jax.random.PRNGKey(0))
+    dense_params = jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype), dense_params)
+    sa_model, sa_params = build_policy_model(base_cfg, "shiftadd",
+                                             dense_model, dense_params)
+    img_shape = (base_cfg.image_size, base_cfg.image_size,
+                 base_cfg.in_channels)
+
+    arms = (
+        ("primary", ElasticWarmPool(dense_model, dense_params,
+                                    max_replicas=max_replicas, spares=spares,
+                                    buckets=buckets, freeze=True)),
+        ("degrade", ElasticWarmPool(sa_model, sa_params, max_replicas=1,
+                                    spares=0, buckets=buckets, freeze=True)),
+    )
+    for arm_name, pool in arms:
+        # fingerprints[bucket] = (dtype signature, n_eqns) of engine 0 —
+        # the reference every other reserve engine must reproduce.
+        fingerprints = {}
+        for eid, engine in enumerate(pool.engines):
+            for b in engine.buckets:
+                where = f"elastic/{arm_name}/engine={eid}/bucket={b}"
+                spec = jax.ShapeDtypeStruct((b,) + img_shape, jnp.float32)
+                closed = jax.make_jaxpr(engine._call)(spec)
+                findings += audit_closed_jaxpr(closed, where)
+                audited.append(AuditedProgram(where, len(closed.jaxpr.eqns)))
+                fp = (dtype_signature(closed), len(closed.jaxpr.eqns))
+                if b not in fingerprints:
+                    fingerprints[b] = fp
+                elif fp != fingerprints[b]:
+                    findings.append(_f(
+                        "JX008", where,
+                        f"engine {eid} traces a different program than "
+                        f"engine 0 at bucket={b} (signature/eqn-count "
+                        f"{fp} vs {fingerprints[b]}) — a warm-pool "
+                        "replacement would not be a drop-in replica"))
+        pool.close()
+    return findings, audited
+
+
+# ---------------------------------------------------------------------------
 # Entry-point inventory: LM prefill / scan-fused decode
 # ---------------------------------------------------------------------------
 
@@ -350,6 +427,8 @@ def audit_lm_continuous(n_slots=2, prompt_bucket=8, max_len=24, chunk=4):
 def run(base_cfg=None):
     """The full pass: (findings, audited-program inventory)."""
     f_vit, a_vit = audit_vit_serving(base_cfg)
+    f_el, a_el = audit_elastic_serving(base_cfg)
     f_lm, a_lm = audit_lm_serving()
     f_lmc, a_lmc = audit_lm_continuous()
-    return f_vit + f_lm + f_lmc, a_vit + a_lm + a_lmc
+    return (f_vit + f_el + f_lm + f_lmc,
+            a_vit + a_el + a_lm + a_lmc)

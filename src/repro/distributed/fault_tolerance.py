@@ -5,17 +5,23 @@ coordinator heartbeat loss; here the same control flow is exercised through
 `FailureInjector` (tests raise at a chosen step) and the train loop's
 catch → restore-from-checkpoint → replay path. The pieces:
 
-- FailureInjector: deterministic failure at step k (or probabilistic).
-- StragglerMonitor: per-step wall-time watermarks; steps slower than
-  `threshold ×` the running median are flagged (the mitigation at scale is
-  re-scheduling the slow host's data shard / evicting the host; the monitor
-  is the detector both would share).
+- FailureInjector: deterministic failure at step k (or probabilistic) for
+  the TRAIN loop, plus a virtual-time fault schedule (`ReplicaFault`) for
+  the SERVING control plane (serve.elastic): kill or slow a replica at a
+  chosen virtual-clock time mid-trace, deterministically.
+- StragglerMonitor: wall-time watermarks; samples slower than `threshold ×`
+  the running median are flagged (the mitigation at scale is re-scheduling
+  the slow host's data shard / evicting the host; the monitor is the
+  detector both paths share — the serving path feeds it per-batch
+  actual/nominal service ratios so mixed bucket sizes don't skew the
+  median).
 - elastic_mesh_shape: given the surviving chip count, pick the largest mesh
   this framework's sharding rules can use (power-of-two data axis, fixed
   model axis), for restart-with-fewer-chips (elastic scaling).
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 
@@ -23,12 +29,44 @@ class SimulatedFailure(RuntimeError):
     pass
 
 
+@dataclasses.dataclass(frozen=True)
+class ReplicaFault:
+    """One injected serving fault, scheduled on the VIRTUAL clock.
+
+    `slot` indexes the serving pool's *active replica list* at fire time
+    (not a raw engine id), so a fault plan stays meaningful whatever the
+    autoscaler did before it fires — the same seeded run always kills the
+    same replica at the same virtual second, which is what makes injected
+    failures replayable bit-for-bit.
+    """
+    at_s: float            # virtual fire time
+    kind: str              # "kill" | "slowdown"
+    slot: int = 0          # index into the active replica list at fire time
+    factor: float = 4.0    # service-time multiplier (kind="slowdown")
+
+    def __post_init__(self):
+        assert self.kind in ("kill", "slowdown"), self.kind
+
+
 class FailureInjector:
-    def __init__(self, fail_at_steps=(), rng=None, prob=0.0):
+    """Deterministic failure injection for both execution modes.
+
+    Train loop: `maybe_fail(step)` raises SimulatedFailure at the chosen
+    steps (or probabilistically) — the catch/restore/replay path's trigger.
+    Serving: construct with `faults=(ReplicaFault(...), ...)` and poll
+    `due(now)` / `next_fault_s()` from the virtual-clock event loop — faults
+    fire in (at_s, slot) order, each exactly once, and `fired` records the
+    sequence for the replay signature.
+    """
+
+    def __init__(self, fail_at_steps=(), rng=None, prob=0.0, faults=()):
         self.fail_at = set(fail_at_steps)
         self.prob = prob
         self.rng = rng
         self._fired = set()
+        self.faults = tuple(sorted(faults, key=lambda f: (f.at_s, f.slot)))
+        self.fired = []
+        self._next = 0
 
     def maybe_fail(self, step: int):
         if step in self.fail_at and step not in self._fired:
@@ -36,6 +74,32 @@ class FailureInjector:
             raise SimulatedFailure(f"injected failure at step {step}")
         if self.prob and self.rng is not None and self.rng.random() < self.prob:
             raise SimulatedFailure(f"random injected failure at step {step}")
+
+    # -- virtual-time serving API -------------------------------------------
+
+    def next_fault_s(self):
+        """Fire time of the next unfired fault (None when exhausted) — an
+        event-loop candidate, so a fault can fire in an otherwise idle gap."""
+        if self._next < len(self.faults):
+            return self.faults[self._next].at_s
+        return None
+
+    def due(self, now_s: float):
+        """Pop every fault with at_s <= now_s, in schedule order."""
+        out = []
+        while (self._next < len(self.faults)
+               and self.faults[self._next].at_s <= now_s):
+            f = self.faults[self._next]
+            self._next += 1
+            self.fired.append(f)
+            out.append(f)
+        return out
+
+    def reset_faults(self):
+        """Rewind the serving schedule (replay runs reuse one injector)."""
+        self._next = 0
+        self.fired = []
+        return self
 
 
 class StragglerMonitor:

@@ -1,0 +1,1177 @@
+"""Elastic serving control plane: autoscaling, failure injection, and
+graceful degradation between the virtual-clock frontend and the replica
+pools (ROADMAP item 4).
+
+Three mechanisms, one determinism contract:
+
+- **Warm pool + autoscaler.** `ElasticWarmPool` builds `max_replicas +
+  spares` fully isolated `BucketedViTEngine`s up front and `warmup()`
+  compiles every bucket program on every one of them — attached or parked.
+  Scaling is then pure membership: `attach()` moves a parked, already-warm
+  engine into the active set, `detach()` parks it again, and a scale event
+  can never trace a program. The pool-wide `trace_count` sums over ALL
+  reserve engines (parked, active, and dead alike), so the
+  zero-recompiles-after-warmup gate extends across every scale-up,
+  scale-down, and failure-recovery event of the whole elastic run. The
+  `Autoscaler` samples queue backlog (seconds of single-replica work) and
+  deadline slack (time until the most urgent queued part forces a dispatch)
+  at every scheduler tick of the virtual clock and grows/shrinks the active
+  set under cooldowns — a pure function of virtual state, so the same
+  seeded trace always produces the same scaling timeline.
+
+- **Failure injection + recovery.** `distributed.fault_tolerance` supplies
+  the fault plan: `ReplicaFault("kill" | "slowdown")` events fire at chosen
+  virtual-clock times through `FailureInjector.due()`. A kill removes the
+  replica mid-trace, requeues its in-flight micro-batch at the head of its
+  class queues (`MicroBatchScheduler.requeue` — the retry is a pure
+  function of virtual state, and batch-invariant logits make it
+  bit-identical), and the autoscaler re-admits capacity from the warm pool
+  (`n_active < min_replicas` backfills immediately, bypassing cooldown). A
+  slowdown multiplies the replica's virtual service time; completions feed
+  `StragglerMonitor` with actual/nominal service ratios (1.0 for healthy
+  batches, so mixed buckets can't skew the median), and a flagged replica
+  is quarantined — killed and backfilled from the warm pool — which is
+  exactly "straggler detection feeds the autoscaler signal".
+
+- **Graceful degradation.** When the primary (dense) pool is saturated —
+  active at `max_replicas` with no parked engine left to attach — the
+  admission path sheds load to a cheaper policy arm (the shiftadd
+  mixture-of-primitives model served from its own warm pool) instead of
+  dropping requests: a deterministic ladder degrades deadline classes in
+  `DegradePolicy.order` as backlog grows (`"ladder"`), and a request the
+  primary admission bound would shed is rerouted whole (`"overflow"`).
+  Every decision is recorded per request (arm + reason) and folded into
+  `ElasticResult.elastic_signature()`, so replay stays bit-identical
+  including degradation decisions — and because both arms derive from the
+  same pretrained dense weights, a degraded request still gets real logits,
+  just from the cheaper primitives.
+
+Determinism model is unchanged from serve.frontend: engine execution is
+REAL, scheduling time is VIRTUAL (calibrated service models), and the
+batch-invariance contract means none of this — scaling, killing,
+requeueing, degrading — can move a logit; it can only move latency.
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.fault_tolerance import (FailureInjector, ReplicaFault,
+                                               StragglerMonitor)
+from repro.serve.metrics import latency_summary, padding_waste
+from repro.serve.scheduler import MicroBatchScheduler
+from repro.serve.traffic import DEADLINE_CLASSES, Trace
+from repro.serve.vision import DEFAULT_BUCKETS, BucketedViTEngine
+
+_INF = float("inf")
+
+PARKED, ACTIVE, DEAD = "parked", "active", "dead"
+
+
+class ElasticWarmPool:
+    """Warm reserve of isolated ViT engines with attach/detach/kill.
+
+    Unlike ThreadPoolReplicas' shared-engine default, every replica here
+    owns its engine (the shape a real multi-host pool takes): killing one
+    cannot touch another's programs, and a parked spare is a complete,
+    already-compiled server. Slots are engine ids (0..reserve-1), stable
+    for the pool's lifetime; `active` is the sorted id list the frontend
+    dispatches over.
+
+    arm="thread": all engines on the default device, concurrency via one
+    executor sized to the full reserve. arm="sharded": engine i is pinned
+    to device i (mod device count) through a one-device `("data",)` mesh —
+    scale-up attaches another device's pre-compiled engine.
+    """
+
+    def __init__(self, model, params, *, max_replicas=2, spares=1,
+                 buckets=DEFAULT_BUCKETS, freeze=True, impl=None, tune=None,
+                 arm="thread", devices=None):
+        assert max_replicas >= 1 and spares >= 0
+        assert arm in ("thread", "sharded"), arm
+        self.arm = arm
+        self.max_replicas = int(max_replicas)
+        self.spares = int(spares)
+        self.reserve = self.max_replicas + self.spares
+        meshes = [None] * self.reserve
+        if arm == "sharded":
+            from repro.distributed.sharding import make_mesh
+            devices = list(devices if devices is not None else jax.devices())
+            meshes = [make_mesh((1,), ("data",),
+                                devices=[devices[i % len(devices)]])
+                      for i in range(self.reserve)]
+        self.engines = [BucketedViTEngine(model, params, buckets=buckets,
+                                          freeze=freeze, impl=impl, tune=tune,
+                                          mesh=meshes[i])
+                        for i in range(self.reserve)]
+        self.state = [PARKED] * self.reserve
+        self.active = []                     # sorted engine ids
+        self.speed_factor = [1.0] * self.reserve
+        self._pool = concurrent.futures.ThreadPoolExecutor(
+            max_workers=self.reserve, thread_name_prefix="vit-elastic")
+        self._closed = False
+
+    # -- warm-pool invariants -----------------------------------------------
+
+    @property
+    def buckets(self):
+        return self.engines[0].buckets
+
+    @property
+    def trace_count(self) -> int:
+        """Compiles across the WHOLE reserve — parked and dead engines
+        included, so a compile anywhere trips the elastic gate."""
+        return sum(e.trace_count for e in self.engines)
+
+    @property
+    def n_active(self) -> int:
+        return len(self.active)
+
+    @property
+    def n_parked(self) -> int:
+        return sum(1 for s in self.state if s == PARKED)
+
+    def warmup(self):
+        """Compile every bucket on every reserve engine — the whole point:
+        after this, no attach/detach/kill/recovery can ever trace."""
+        for e in self.engines:
+            e.warmup()
+        return self
+
+    # -- membership (the control plane's verbs) ------------------------------
+
+    def attach(self):
+        """Activate the lowest-id parked engine (None when exhausted or the
+        active set is at max_replicas). Zero compiles — it is already warm."""
+        if self.n_active >= self.max_replicas:
+            return None
+        for i, s in enumerate(self.state):
+            if s == PARKED:
+                self.state[i] = ACTIVE
+                self.active.append(i)
+                self.active.sort()
+                return i
+        return None
+
+    def detach(self, slot: int):
+        """Park an active engine (scale-down). It stays warm."""
+        assert self.state[slot] == ACTIVE, (slot, self.state[slot])
+        self.state[slot] = PARKED
+        self.active.remove(slot)
+
+    def kill(self, slot: int):
+        """Remove an active engine permanently (failure / quarantine)."""
+        assert self.state[slot] == ACTIVE, (slot, self.state[slot])
+        self.state[slot] = DEAD
+        self.active.remove(slot)
+
+    def reset_membership(self):
+        """Park everything and heal the dead — the replay/baseline harness
+        hook. Engines persist (still warm, still counted by trace_count);
+        only the control-plane state resets."""
+        self.state = [PARKED] * self.reserve
+        self.active = []
+        self.speed_factor = [1.0] * self.reserve
+        return self
+
+    # -- execution -----------------------------------------------------------
+
+    def submit(self, slot: int, images) -> concurrent.futures.Future:
+        """Future resolving to (logits, measured wall seconds)."""
+        if self._closed:
+            raise RuntimeError("submit() on a closed ElasticWarmPool")
+        assert self.state[slot] == ACTIVE, (slot, self.state[slot])
+        engine = self.engines[slot]
+
+        def run():
+            t0 = time.perf_counter()
+            logits = jax.block_until_ready(engine.infer(images))
+            return logits, time.perf_counter() - t0
+
+        return self._pool.submit(run)
+
+    def close(self):
+        if self._closed:
+            return
+        self._closed = True
+        self._pool.shutdown(wait=True)
+
+
+# ---------------------------------------------------------------------------
+# Autoscaler: queue-depth + deadline-slack policy under cooldowns
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AutoscalerPolicy:
+    """Thresholds in calibrated seconds (derive them from the measured
+    max-bucket service time — `default_autoscaler_policy` — so the policy
+    means the same thing on every host)."""
+    min_replicas: int = 1
+    max_replicas: int = 2
+    up_backlog_s: float = 0.0      # per-active-replica queued work (s)
+    slack_up_s: float = 0.0        # urgency: time-to-forced-dispatch floor
+    up_cooldown_s: float = 0.0
+    down_backlog_s: float = 0.0    # total queued work under which to shrink
+    down_cooldown_s: float = 0.0
+
+
+def default_autoscaler_policy(svc_max_s: float, *, min_replicas=1,
+                              max_replicas=2) -> AutoscalerPolicy:
+    """Scale up when a replica's share of the backlog exceeds one max-bucket
+    service time (or the most urgent queued part is within two service times
+    of being forced out with every replica busy); scale down once the queue
+    is nearly dry, with a 4× longer cooldown so the pool doesn't flap."""
+    s = float(svc_max_s)
+    return AutoscalerPolicy(min_replicas=int(min_replicas),
+                            max_replicas=int(max_replicas),
+                            up_backlog_s=1.0 * s, slack_up_s=2.0 * s,
+                            up_cooldown_s=1.0 * s,
+                            down_backlog_s=0.25 * s,
+                            down_cooldown_s=4.0 * s)
+
+
+class Autoscaler:
+    """Mutable cooldown state around a frozen policy. decide() is pure in
+    (inputs, cooldown state); the serve loop owns applying the decision."""
+
+    def __init__(self, policy: AutoscalerPolicy):
+        self.policy = policy
+        self.last_up_s = -_INF
+        self.last_down_s = -_INF
+
+    def decide(self, now: float, *, n_active: int, n_idle: int,
+               backlog_s: float, until_forced_s=None) -> int:
+        """+1 grow, -1 shrink, 0 hold. n_active < min_replicas always grows
+        (failure backfill — recovery is not thrash, so no cooldown)."""
+        p = self.policy
+        if n_active < p.min_replicas:
+            return +1
+        urgent = (until_forced_s is not None and n_idle == 0
+                  and until_forced_s < p.slack_up_s)
+        if ((backlog_s / max(n_active, 1) > p.up_backlog_s or urgent)
+                and n_active < p.max_replicas
+                and now - self.last_up_s >= p.up_cooldown_s):
+            return +1
+        if (backlog_s <= p.down_backlog_s and n_idle > 0
+                and n_active > p.min_replicas
+                and now - self.last_down_s >= p.down_cooldown_s
+                and now - self.last_up_s >= p.down_cooldown_s):
+            return -1
+        return 0
+
+
+# ---------------------------------------------------------------------------
+# Graceful degradation: dense → shiftadd ladder per deadline class
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DegradePolicy:
+    """Deterministic shed-to-cheaper-arm ladder, applied at admission when
+    the primary pool is *saturated* (at max_replicas with no spare to
+    attach). Classes in `order` degrade cumulatively: the first
+    `min_backlog_s` seconds of backlog degrade order[0], every further
+    `step_backlog_s` adds the next class. Laxest-first by default — an
+    interactive request keeps the premium arm until the backlog says
+    otherwise."""
+    order: tuple = ("relaxed", "standard", "interactive")
+    min_backlog_s: float = 0.0
+    step_backlog_s: float = _INF
+
+
+def degrade_level(policy: DegradePolicy, *, saturated: bool,
+                  backlog_s: float) -> int:
+    """How many classes of `policy.order` currently shed to the cheap arm —
+    a pure function of (saturation, backlog), hence replayable."""
+    if not saturated or backlog_s <= policy.min_backlog_s:
+        return 0
+    extra = backlog_s - policy.min_backlog_s
+    return min(1 + int(extra // policy.step_backlog_s), len(policy.order))
+
+
+@dataclasses.dataclass
+class DegradeArm:
+    """The cheap arm: its own warm pool (shiftadd weights), its own
+    scheduler over its own calibrated service model, one shared virtual
+    clock with the primary. The arm is static — the autoscaler governs the
+    primary; this is the pressure-relief valve."""
+    pool: ElasticWarmPool
+    scheduler: MicroBatchScheduler
+    policy: DegradePolicy
+    image_fn: object = None
+
+
+# ---------------------------------------------------------------------------
+# The elastic event loop
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ElasticResult:
+    report: dict                 # the BENCH_elastic.json arm record
+    requests: list               # per-request dicts (rid order, shed incl.)
+    logits: dict                 # rid → np.ndarray (size, n_classes)
+    batches: list                # dispatch log across BOTH arms
+    events: dict                 # {"scale": [...], "faults": [...],
+                                 #  "degraded": [...]}
+
+    def routing_signature(self):
+        return tuple(
+            (b["arm"], round(b["formed_s"], 9), b["slot"], b["bucket"],
+             b["reason"], bool(b["killed"]), tuple(b["parts"]))
+            for b in self.batches)
+
+    def elastic_signature(self):
+        """Routing + scaling timeline + fault firings + degradation
+        decisions: the full control-plane history replay must reproduce."""
+        return (self.routing_signature(),
+                tuple(self.events["scale"]),
+                tuple(self.events["faults"]),
+                tuple(self.events["degraded"]))
+
+
+def serve_elastic_trace(pool: ElasticWarmPool,
+                        scheduler: MicroBatchScheduler, trace: Trace, *,
+                        policy: AutoscalerPolicy, faults=(),
+                        degrade: DegradeArm = None,
+                        straggler_threshold=2.0, straggler_window=32,
+                        image_fn=None,
+                        collect_logits=True) -> ElasticResult:
+    """serve.frontend.serve_trace with membership dynamics: the active slot
+    set changes under the autoscaler and the fault plan, and a DegradeArm
+    absorbs what a saturated primary would shed. All control decisions are
+    functions of virtual state only; see the module docstring."""
+    from repro.serve.frontend import default_image_fn
+
+    if image_fn is None:
+        image_fn = default_image_fn(pool.engines[0].model.cfg)
+    if degrade is not None and degrade.image_fn is None:
+        degrade.image_fn = default_image_fn(
+            degrade.pool.engines[0].model.cfg)
+    injector = FailureInjector(faults=tuple(faults))
+    scaler = Autoscaler(policy)
+    monitor = StragglerMonitor(threshold=straggler_threshold,
+                               window=straggler_window)
+
+    svc = scheduler.service_model_s
+    bmax = pool.buckets[-1]
+    svc_max = svc[bmax]
+
+    arms = {"primary": (pool, scheduler, image_fn, svc)}
+    if degrade is not None:
+        arms["degraded"] = (degrade.pool, degrade.scheduler,
+                            degrade.image_fn,
+                            degrade.scheduler.service_model_s)
+
+    pools_total = lambda: sum(a[0].trace_count for a in arms.values())
+    traces_at_start = pools_total()
+
+    # Initial membership: primary at min_replicas, degrade arm fully on.
+    free_at = {name: {} for name in arms}
+    scale_log = []
+    while pool.n_active < policy.min_replicas:
+        s = pool.attach()
+        if s is None:
+            raise RuntimeError("warm pool smaller than min_replicas")
+        free_at["primary"][s] = 0.0
+        scale_log.append(("init", 0.0, s))
+    if degrade is not None:
+        while True:
+            s = degrade.pool.attach()
+            if s is None:
+                break
+            free_at["degraded"][s] = 0.0
+
+    arrivals = list(trace.requests)
+    ai = 0
+    now = 0.0
+    inflight = []                # mutable dicts; see dispatch()
+    cur = {}                     # (arm, slot) → in-flight entry
+    unprocessed = []             # completions the straggler monitor hasn't seen
+    batches_log = []
+    shed, arm_of, degrade_reason = {}, {}, {}
+    fault_log, degraded_log = [], []
+    timeline = [(0.0, pool.n_active)]
+    kills = straggler_evictions = recoveries = scale_ups = scale_downs = 0
+    completion_seq = 0
+
+    def backlog_s():
+        """Queued primary work in single-replica seconds at max-bucket
+        rate — the autoscaler's and the ladder's shared pressure signal."""
+        return scheduler.queued_images * svc_max / bmax
+
+    def saturated():
+        return not (pool.n_active < policy.max_replicas
+                    and pool.n_parked > 0)
+
+    def mark(t):
+        timeline.append((t, pool.n_active))
+
+    def kill_slot(slot, t, *, why):
+        nonlocal kills, straggler_evictions
+        entry = cur.get(("primary", slot))
+        if entry is not None and entry["done_s"] > t and not entry["killed"]:
+            entry["killed"] = True
+            scheduler.requeue(entry["batch"].parts)
+        pool.kill(slot)
+        free_at["primary"].pop(slot, None)
+        cur.pop(("primary", slot), None)
+        if why == "kill":
+            kills += 1
+        else:
+            straggler_evictions += 1
+        fault_log.append((why, round(t, 9), slot))
+        mark(t)
+
+    def apply_fault(f: ReplicaFault, t):
+        act = pool.active
+        if not act:
+            fault_log.append((f.kind + "_skipped", round(t, 9), -1))
+            return
+        victim = act[f.slot % len(act)]
+        if f.kind == "kill":
+            kill_slot(victim, t, why="kill")
+        else:
+            pool.speed_factor[victim] = float(f.factor)
+            fault_log.append(("slowdown", round(t, 9), victim, f.factor))
+
+    def process_completions(t):
+        """Feed finished primary batches to the straggler monitor in
+        completion order; quarantine flagged replicas (kill + backfill via
+        the autoscaler — the detector feeding the scaling signal)."""
+        nonlocal completion_seq
+        due = [e for e in unprocessed if e["done_s"] <= t]
+        if not due:
+            return
+        due.sort(key=lambda e: (e["done_s"], e["slot"]))
+        for e in due:
+            unprocessed.remove(e)
+            if e["killed"] or e["arm"] != "primary":
+                continue
+            completion_seq += 1
+            ratio = (e["done_s"] - e["dispatch_s"]) / svc[e["batch"].bucket]
+            if (monitor.record(completion_seq, ratio)
+                    and pool.state[e["slot"]] == ACTIVE):
+                kill_slot(e["slot"], t, why="straggler_evict")
+
+    def autoscale(t):
+        nonlocal scale_ups, scale_downs, recoveries
+        while True:
+            idle = [s for s in pool.active
+                    if free_at["primary"][s] <= t]
+            forced = scheduler.next_forced_dispatch_s()
+            until = None if forced is None else forced - t
+            d = scaler.decide(t, n_active=pool.n_active, n_idle=len(idle),
+                              backlog_s=backlog_s(), until_forced_s=until)
+            if d > 0:
+                recovery = pool.n_active < policy.min_replicas
+                s = pool.attach()
+                if s is None:
+                    return
+                free_at["primary"][s] = t
+                if recovery:
+                    recoveries += 1
+                    scale_log.append(("recover", round(t, 9), s))
+                else:
+                    scale_ups += 1
+                    scaler.last_up_s = t
+                    scale_log.append(("up", round(t, 9), s))
+                mark(t)
+            elif d < 0:
+                victim = max(s for s in pool.active
+                             if free_at["primary"][s] <= t)
+                pool.detach(victim)
+                del free_at["primary"][victim]
+                scale_downs += 1
+                scaler.last_down_s = t
+                scale_log.append(("down", round(t, 9), victim))
+                mark(t)
+            else:
+                return
+
+    def admit(req):
+        lvl = degrade_level(degrade.policy, saturated=saturated(),
+                            backlog_s=backlog_s()) if degrade else 0
+        ladder = degrade and req.klass in degrade.policy.order[:lvl]
+        if not ladder and scheduler.offer(req, req.arrival_s):
+            arm_of[req.rid] = "primary"
+            return
+        reason = "ladder" if ladder else "overflow"
+        if degrade and degrade.scheduler.offer(req, req.arrival_s):
+            arm_of[req.rid] = "degraded"
+            degrade_reason[req.rid] = reason
+            degraded_log.append((req.rid, req.klass, reason,
+                                 round(req.arrival_s, 9)))
+            return
+        shed[req.rid] = req
+
+    def dispatch(name, drain=False):
+        apool, sched, ifn, asvc = arms[name]
+        fa = free_at[name]
+        while True:
+            idle = [s for s in apool.active if fa[s] <= now]
+            if not idle:
+                return
+            batch = sched.form_batch(now, drain=drain)
+            if batch is None:
+                return
+            slot = min(idle)
+            images = jnp.concatenate(
+                [jnp.asarray(ifn(p.req, p.offset, p.size))
+                 for p in batch.parts], axis=0) if len(batch.parts) > 1 \
+                else jnp.asarray(ifn(batch.parts[0].req,
+                                     batch.parts[0].offset,
+                                     batch.parts[0].size))
+            fut = apool.submit(slot, images)
+            done = now + asvc[batch.bucket] * apool.speed_factor[slot]
+            fa[slot] = done
+            entry = {"arm": name, "slot": slot, "batch": batch, "fut": fut,
+                     "dispatch_s": now, "done_s": done, "killed": False}
+            inflight.append(entry)
+            cur[(name, slot)] = entry
+            unprocessed.append(entry)
+            batches_log.append({
+                "arm": name, "formed_s": batch.formed_s, "slot": slot,
+                "bucket": batch.bucket, "n_images": batch.n_images,
+                "reason": batch.reason, "done_s": done, "entry": entry,
+                "parts": [(p.rid, p.part_idx, p.size) for p in batch.parts]})
+
+    any_queued = lambda: any(a[1].has_queued() for a in arms.values())
+
+    while True:
+        for f in injector.due(now):
+            apply_fault(f, now)
+        while ai < len(arrivals) and arrivals[ai].arrival_s <= now:
+            admit(arrivals[ai])
+            ai += 1
+        process_completions(now)
+        autoscale(now)
+        if not pool.active and scheduler.has_queued():
+            raise RuntimeError(
+                "all primary replicas dead with work queued and the warm "
+                "pool exhausted — provision more spares for this fault plan")
+        for name in arms:
+            dispatch(name)
+        candidates = []
+        if ai < len(arrivals):
+            candidates.append(arrivals[ai].arrival_s)
+        nf = injector.next_fault_s()
+        if nf is not None and (ai < len(arrivals) or any_queued()
+                               or any(t > now for fa in free_at.values()
+                                      for t in fa.values())):
+            candidates.append(nf)
+        for name in arms:
+            fa = free_at[name]
+            busy = [t for t in fa.values() if t > now]
+            if busy:
+                candidates.append(min(busy))
+            if arms[name][1].has_queued() and len(busy) < len(fa):
+                forced = arms[name][1].next_forced_dispatch_s()
+                if forced is not None and forced > now:
+                    candidates.append(forced)
+        # The autoscaler can unblock a queue no event would otherwise serve
+        # (all actives busy forever is impossible, but a queue below every
+        # trigger with idle slots only frees on the next busy/arrival tick).
+        if not candidates:
+            if any_queued():
+                for name in arms:
+                    dispatch(name, drain=True)
+                continue
+            break
+        now = max(now, min(candidates))
+
+    process_completions(_INF)
+
+    # -- resolve real execution, reassemble per-request ---------------------
+    part_out = {}
+    wall_samples = []
+    for e in inflight:
+        if e["killed"]:
+            continue
+        logits, wall_s = e["fut"].result()
+        wall_samples.append(wall_s)
+        logits = np.asarray(logits)
+        batch = e["batch"]
+        off = 0
+        for p in batch.parts:
+            rec = {"dispatch_s": batch.formed_s, "done_s": e["done_s"],
+                   "arm": e["arm"], "slot": e["slot"],
+                   "bucket": batch.bucket, "n_parts": p.n_parts,
+                   "wait_s": batch.formed_s - p.enqueued_s}
+            part_out[(p.rid, p.part_idx)] = (
+                rec, logits[off:off + p.size] if collect_logits else None)
+            off += p.size
+
+    requests_out, logits_out = [], {}
+    latencies, waits = [], []
+    met_requests = met_images = late_requests = 0
+    degraded_by_class = {k: 0 for k in DEADLINE_CLASSES}
+    for req in trace.requests:
+        if req.rid in shed:
+            requests_out.append({
+                "rid": req.rid, "klass": req.klass, "size": req.size,
+                "arrival_s": req.arrival_s, "shed": True, "met": False})
+            continue
+        n_parts = part_out[(req.rid, 0)][0]["n_parts"]
+        parts = [part_out[(req.rid, i)] for i in range(n_parts)]
+        completion = max(rec["done_s"] for rec, _ in parts)
+        latency = completion - req.arrival_s
+        met = completion <= req.deadline_s
+        latencies.append(latency)
+        waits.extend(rec["wait_s"] for rec, _ in parts)
+        met_requests += int(met)
+        met_images += req.size * int(met)
+        late_requests += int(not met)
+        arm = arm_of[req.rid]
+        if arm == "degraded":
+            degraded_by_class[req.klass] += 1
+        requests_out.append({
+            "rid": req.rid, "klass": req.klass, "size": req.size,
+            "arrival_s": req.arrival_s, "deadline_s": req.deadline_s,
+            "completion_s": completion, "latency_s": latency,
+            "met": met, "shed": False, "arm": arm,
+            "degrade_reason": degrade_reason.get(req.rid),
+            "slots": sorted({rec["slot"] for rec, _ in parts})})
+        if collect_logits:
+            logits_out[req.rid] = np.concatenate(
+                [lg for _, lg in parts], axis=0)
+
+    served_batches = [b for b in batches_log if not b["entry"]["killed"]]
+    for b in batches_log:
+        b["killed"] = b["entry"]["killed"]
+        del b["entry"]
+    total = len(trace.requests)
+    makespan = max((b["done_s"] for b in served_batches), default=0.0)
+    real = sum(b["n_images"] for b in served_batches)
+    padded = sum(b["bucket"] for b in served_batches)
+    reasons = {}
+    for b in served_batches:
+        reasons[b["reason"]] = reasons.get(b["reason"], 0) + 1
+    # Replica-seconds: integral of the active count over the run — the cost
+    # side of elasticity (a fixed pool pays max_replicas × makespan).
+    replica_seconds = 0.0
+    for (t0, n), (t1, _) in zip(timeline, timeline[1:] + [(makespan, 0)]):
+        replica_seconds += n * max(0.0, min(t1, makespan) - min(t0, makespan))
+    n_degraded = sum(degraded_by_class.values())
+    reasons_deg = {}
+    for _, _, r, _ in degraded_log:
+        reasons_deg[r] = reasons_deg.get(r, 0) + 1
+    report = {
+        "scenario": trace.scenario,
+        "seed": trace.seed,
+        "arm": f"elastic-{pool.arm}",
+        "min_replicas": policy.min_replicas,
+        "max_replicas": policy.max_replicas,
+        "spares": pool.spares,
+        "buckets": list(pool.buckets),
+        "service_model_s": {str(b): s for b, s in svc.items()},
+        "requests": total,
+        "images": trace.total_images,
+        "offered_images_per_s": trace.target_images_per_s,
+        "served_requests": total - len(shed),
+        "shed_requests": len(shed),
+        "deadline_miss_rate": ((late_requests + len(shed)) / total
+                               if total else 0.0),
+        "deadline_met_requests": met_requests,
+        "goodput_images_per_s": met_images / makespan if makespan else 0.0,
+        "latency": latency_summary(latencies),
+        "queue_wait": latency_summary(waits),
+        "measured_batch": latency_summary(wall_samples),
+        "batches": len(served_batches),
+        "killed_batches": len(batches_log) - len(served_batches),
+        "padding_waste": padding_waste(real, padded),
+        "dispatch_reasons": reasons,
+        "virtual_makespan_s": makespan,
+        "recompiles_after_warmup": pools_total() - traces_at_start,
+        "scale_ups": scale_ups,
+        "scale_downs": scale_downs,
+        "kills": kills,
+        "straggler_evictions": straggler_evictions,
+        "recoveries": recoveries,
+        "max_active": max(n for _, n in timeline),
+        "replica_seconds": replica_seconds,
+        "degraded_requests": n_degraded,
+        "degraded_by_class": degraded_by_class,
+        "degrade_reasons": reasons_deg,
+        "faults_fired": len(injector.fired),
+    }
+    events = {"scale": scale_log, "faults": fault_log,
+              "degraded": degraded_log}
+    return ElasticResult(report=report, requests=requests_out,
+                         logits=logits_out, batches=batches_log,
+                         events=events)
+
+
+# ---------------------------------------------------------------------------
+# The diurnal elastic scenario: BENCH_elastic.json
+# ---------------------------------------------------------------------------
+
+def elastic_sweep(base_cfg=None, *, scenario="diurnal", n_requests=220,
+                  seed=0, min_replicas=1, max_replicas=2, spares=1,
+                  degrade_replicas=1, arm="thread", utilization=1.15,
+                  buckets=None, freeze=True, impl=None, tune=None,
+                  calibrate_iters=3, kill_at_frac=0.35,
+                  slowdown_at_frac=0.6, slowdown_factor=4.0,
+                  verify_replay=True, collect_logits=False) -> dict:
+    """The acceptance scenario, one record for BENCH_elastic.json.
+
+    The diurnal trace is deliberately calibrated ABOVE the fixed baseline:
+    `utilization` × the min_replicas capacity, with the sinusoidal peak at
+    RAMP_HI (1.8×) on top — the baseline (a fixed pool of min_replicas, no
+    autoscaler, no degradation, served through the same elastic loop) must
+    record a miss rate > 0, and the elastic arm (scale to max_replicas,
+    shed the ladder to the shiftadd arm at saturation, survive a replica
+    kill and a straggler at chosen virtual times) must record ZERO misses
+    and ZERO recompiles. A replay re-runs the elastic arm from a reset
+    control plane and must reproduce the elastic signature and every logit
+    bit-for-bit — injected-failure timing and degradation decisions
+    included. benchmarks/check_elastic.py gates all three.
+    """
+    import dataclasses as _dc
+
+    from repro.core.policy import DENSE
+    from repro.nn.vit import ShiftAddViT, ViTConfig
+    from repro.serve.frontend import calibrate_service_models
+    from repro.serve.traffic import default_budgets, make_trace
+    from repro.serve.vision import build_policy_model
+
+    base_cfg = base_cfg or ViTConfig(image_size=56)
+    buckets = tuple(buckets) if buckets else DEFAULT_BUCKETS
+    dense_model = ShiftAddViT(_dc.replace(base_cfg, policy=DENSE))
+    dense_params = dense_model.init(jax.random.PRNGKey(seed))
+    sa_model, sa_params = build_policy_model(base_cfg, "shiftadd",
+                                             dense_model, dense_params)
+    shape = (base_cfg.image_size, base_cfg.image_size, base_cfg.in_channels)
+
+    primary = ElasticWarmPool(dense_model, dense_params,
+                              max_replicas=max_replicas, spares=spares,
+                              buckets=buckets, freeze=freeze, impl=impl,
+                              tune=tune, arm=arm).warmup()
+    cheap = ElasticWarmPool(sa_model, sa_params,
+                            max_replicas=degrade_replicas, spares=0,
+                            buckets=buckets, freeze=freeze, impl=impl,
+                            tune=tune, arm=arm).warmup()
+    svc_p, svc_d = calibrate_service_models([primary, cheap], shape,
+                                            iters=calibrate_iters)
+    bmax = primary.buckets[-1]
+    capacity_min = min_replicas * bmax / svc_p[bmax]
+    budgets = default_budgets(svc_p[bmax])
+    trace = make_trace(scenario, n_requests, seed,
+                       target_images_per_s=utilization * capacity_min,
+                       budgets_s=budgets, max_size=bmax)
+    horizon = trace.horizon_s
+    faults = []
+    if kill_at_frac is not None:
+        faults.append(ReplicaFault(at_s=kill_at_frac * horizon, kind="kill",
+                                   slot=0))
+    if slowdown_at_frac is not None:
+        faults.append(ReplicaFault(at_s=slowdown_at_frac * horizon,
+                                   kind="slowdown", slot=0,
+                                   factor=slowdown_factor))
+    faults = tuple(faults)
+
+    def scheduler_for(pool, svc, max_queue_images):
+        pmax = pool.buckets[-1]
+        return MicroBatchScheduler(pool.buckets, svc,
+                                   slack_s=0.5 * svc[pmax],
+                                   linger_s=1.0 * svc[pmax],
+                                   max_queue_images=max_queue_images)
+
+    def run_baseline():
+        primary.reset_membership()
+        fixed = AutoscalerPolicy(min_replicas=min_replicas,
+                                 max_replicas=min_replicas)
+        return serve_elastic_trace(
+            primary, scheduler_for(primary, svc_p, 8 * bmax), trace,
+            policy=fixed, faults=(), degrade=None, collect_logits=False)
+
+    def run_elastic(collect):
+        primary.reset_membership()
+        cheap.reset_membership()
+        policy = default_autoscaler_policy(svc_p[bmax],
+                                           min_replicas=min_replicas,
+                                           max_replicas=max_replicas)
+        degrade = DegradeArm(
+            pool=cheap,
+            scheduler=scheduler_for(cheap, svc_d, None),
+            policy=DegradePolicy(min_backlog_s=1.0 * svc_p[bmax],
+                                 step_backlog_s=2.0 * svc_p[bmax]))
+        return serve_elastic_trace(
+            primary, scheduler_for(primary, svc_p, 8 * bmax), trace,
+            policy=policy, faults=faults, degrade=degrade,
+            collect_logits=collect)
+
+    base = run_baseline()
+    elastic = run_elastic(collect=collect_logits or verify_replay)
+
+    from repro.kernels import ops
+    record = {
+        "backend": jax.default_backend(),
+        "model": (f"shiftadd_vit({base_cfg.n_layers}L,{base_cfg.d_model}d,"
+                  f"{base_cfg.n_patches}p)"),
+        "image_size": base_cfg.image_size,
+        "frozen": bool(freeze),
+        "impl": impl or ops.default_impl(),
+        "scenario": scenario,
+        "utilization": utilization,
+        "trace": trace.summary(),
+        "budgets_s": budgets,
+        "service_model_s": {"dense": {str(b): s for b, s in svc_p.items()},
+                            "shiftadd": {str(b): s
+                                         for b, s in svc_d.items()}},
+        "faults": [dataclasses.asdict(f) for f in faults],
+        "baseline": base.report,
+        "elastic": elastic.report,
+        "baseline_deadline_miss_rate": base.report["deadline_miss_rate"],
+        "elastic_deadline_miss_rate": elastic.report["deadline_miss_rate"],
+        "recompiles_after_warmup": (base.report["recompiles_after_warmup"]
+                                    + elastic.report[
+                                        "recompiles_after_warmup"]),
+        "replica_seconds_saved_vs_fixed_max": (
+            max_replicas * elastic.report["virtual_makespan_s"]
+            - elastic.report["replica_seconds"]),
+    }
+    if verify_replay:
+        replay = run_elastic(collect=True)
+        record["replay_identical_events"] = (
+            elastic.elastic_signature() == replay.elastic_signature())
+        record["replay_bit_identical_logits"] = (
+            set(elastic.logits) == set(replay.logits) and all(
+                np.array_equal(elastic.logits[r], replay.logits[r])
+                for r in elastic.logits))
+    primary.close()
+    cheap.close()
+    return record
+
+
+# ---------------------------------------------------------------------------
+# LM slots: elastic continuous batching
+# ---------------------------------------------------------------------------
+
+class ElasticLMPool:
+    """Warm reserve of stateful `BucketedLMEngine`s with the same
+    attach/detach/kill membership verbs as ElasticWarmPool. LM engines own
+    their packed slot arrays, so replicas never share one — a kill loses
+    that engine's in-progress decode state, and recovery restarts the
+    requeued requests from prefill on another engine (greedy decode makes
+    the retry bit-identical)."""
+
+    arm = "lm"
+
+    def __init__(self, model, params, *, max_replicas=2, spares=1,
+                 **engine_kw):
+        from repro.serve.lm import BucketedLMEngine
+
+        assert max_replicas >= 1 and spares >= 0
+        self.max_replicas = int(max_replicas)
+        self.spares = int(spares)
+        self.reserve = self.max_replicas + self.spares
+        self.engines = [BucketedLMEngine(model, params, **engine_kw)
+                        for _ in range(self.reserve)]
+        self.state = [PARKED] * self.reserve
+        self.active = []
+
+    @property
+    def prompt_buckets(self):
+        return self.engines[0].prompt_buckets
+
+    @property
+    def chunk(self) -> int:
+        return self.engines[0].chunk
+
+    @property
+    def n_slots(self) -> int:
+        return self.engines[0].n_slots
+
+    @property
+    def trace_count(self) -> int:
+        return sum(e.trace_count for e in self.engines)
+
+    @property
+    def prefill_trace_count(self) -> int:
+        return sum(e.prefill_trace_count for e in self.engines)
+
+    @property
+    def n_active(self) -> int:
+        return len(self.active)
+
+    @property
+    def n_parked(self) -> int:
+        return sum(1 for s in self.state if s == PARKED)
+
+    def warmup(self):
+        for e in self.engines:
+            e.warmup()
+        return self
+
+    def reset(self):
+        for e in self.engines:
+            e.reset()
+        return self
+
+    def attach(self):
+        if self.n_active >= self.max_replicas:
+            return None
+        for i, s in enumerate(self.state):
+            if s == PARKED:
+                self.state[i] = ACTIVE
+                self.active.append(i)
+                self.active.sort()
+                return i
+        return None
+
+    def detach(self, slot: int):
+        assert self.state[slot] == ACTIVE, (slot, self.state[slot])
+        self.state[slot] = PARKED
+        self.active.remove(slot)
+
+    def kill(self, slot: int):
+        assert self.state[slot] == ACTIVE, (slot, self.state[slot])
+        self.state[slot] = DEAD
+        self.active.remove(slot)
+
+    def reset_membership(self):
+        self.state = [PARKED] * self.reserve
+        self.active = []
+        return self.reset()
+
+    def close(self):
+        pass
+
+
+def serve_elastic_lm_trace(pool: ElasticLMPool, scheduler, trace: Trace,
+                           svc, *, policy: AutoscalerPolicy,
+                           per_request_s: float, faults=(),
+                           new_token_range=(4, 24), collect_logits=True):
+    """serve.frontend.serve_lm_trace over a dynamic engine set.
+
+    The decision grid stays the chunk boundary: at each boundary faults
+    fire, the autoscaler attaches/parks warm engines (backlog measured as
+    queued_requests × per_request_s, spread over active slots), and a
+    killed engine's in-progress requests are requeued at their class heads
+    to restart from prefill elsewhere. Returns the same LMTrafficResult as
+    serve_lm_trace, with elastic counters added to the report."""
+    from repro.serve.frontend import LMTrafficResult
+    from repro.serve.traffic import lm_new_tokens, lm_prompt_tokens
+
+    injector = FailureInjector(faults=tuple(faults))
+    scaler = Autoscaler(policy)
+    engines = pool.engines
+    vocab = engines[0].model.cfg.vocab_size
+    prefill_s, chunk_s = svc["prefill_s"], svc["chunk_s"]
+    K = pool.chunk
+    t = {}
+    slot_state = {}
+    scale_log, fault_log = [], []
+    kills = recoveries = scale_ups = scale_downs = 0
+    while pool.n_active < policy.min_replicas:
+        e = pool.attach()
+        if e is None:
+            raise RuntimeError("warm pool smaller than min_replicas")
+        t[e] = 0.0
+        slot_state[e] = [None] * pool.n_slots
+        scale_log.append(("init", 0.0, e))
+
+    arrivals = list(trace.requests)
+    ai = 0
+    traces_at_start = pool.trace_count
+    dispatches, shed, done = [], {}, {}
+    tokens_out, logits_out = {}, {}
+    n_chunks = occupancy_sum = 0
+
+    def finish(rec, now):
+        req = rec["req"]
+        done[req.rid] = {
+            "rid": req.rid, "klass": req.klass, "prompt_len": req.size,
+            "new_tokens": rec["target"], "arrival_s": req.arrival_s,
+            "deadline_s": req.deadline_s, "admit_s": rec["admit_s"],
+            "ttft_s": rec["ttft_s"], "completion_s": now,
+            "latency_s": now - req.arrival_s,
+            "met": now <= req.deadline_s, "shed": False,
+            "engine": rec["engine"], "slot": rec["slot"],
+            "bucket": rec["bucket"]}
+        tokens_out[req.rid] = np.concatenate(rec["toks"])
+        if collect_logits:
+            logits_out[req.rid] = np.concatenate(rec["logits"], axis=0)
+
+    def kill_engine(eid, now):
+        nonlocal kills
+        recs = [r for r in slot_state[eid] if r is not None]
+        scheduler.requeue([(r["req"], r["enq"]) for r in recs])
+        pool.kill(eid)
+        del t[eid]
+        del slot_state[eid]
+        kills += 1
+        fault_log.append(("kill", round(now, 9), eid))
+
+    def autoscale(now):
+        nonlocal scale_ups, scale_downs, recoveries
+        while True:
+            n_free = sum(1 for e in pool.active
+                         for r in slot_state[e] if r is None)
+            backlog = scheduler.queued_requests * per_request_s
+            spread = backlog / max(pool.n_active * pool.n_slots, 1)
+            d = scaler.decide(now, n_active=pool.n_active, n_idle=n_free,
+                              backlog_s=spread * pool.n_slots,
+                              until_forced_s=None)
+            if d > 0:
+                recovery = pool.n_active < policy.min_replicas
+                e = pool.attach()
+                if e is None:
+                    return
+                t[e] = now
+                slot_state[e] = [None] * pool.n_slots
+                if recovery:
+                    recoveries += 1
+                    scale_log.append(("recover", round(now, 9), e))
+                else:
+                    scale_ups += 1
+                    scaler.last_up_s = now
+                    scale_log.append(("up", round(now, 9), e))
+            elif d < 0:
+                empties = [e for e in pool.active
+                           if all(r is None for r in slot_state[e])]
+                if not empties:
+                    return
+                victim = max(empties)
+                pool.detach(victim)
+                del t[victim]
+                del slot_state[victim]
+                scale_downs += 1
+                scaler.last_down_s = now
+                scale_log.append(("down", round(now, 9), victim))
+            else:
+                return
+
+    while True:
+        if (ai >= len(arrivals) and not scheduler.has_queued()
+                and all(r is None for st in slot_state.values()
+                        for r in st)):
+            break
+        e = min(pool.active, key=lambda i: (t[i], i))
+        now = t[e]
+        for f in injector.due(now):
+            act = pool.active
+            if not act:
+                continue
+            victim = act[f.slot % len(act)]
+            if f.kind == "kill":
+                kill_engine(victim, now)
+            else:
+                fault_log.append(("slowdown_unsupported", round(now, 9),
+                                  victim))
+        while ai < len(arrivals) and arrivals[ai].arrival_s <= now:
+            req = arrivals[ai]
+            if not scheduler.offer(req, req.arrival_s):
+                shed[req.rid] = req
+            ai += 1
+        autoscale(now)
+        if not pool.active:
+            raise RuntimeError(
+                "all LM engines dead with work remaining and the warm pool "
+                "exhausted — provision more spares for this fault plan")
+        if e not in t:               # the boundary engine was just killed
+            continue
+        eng, st = engines[e], slot_state[e]
+
+        for s_i, rec in enumerate(st):
+            if rec is not None and rec["gen"] >= rec["target"]:
+                eng.evict(s_i)
+                finish(rec, now)
+                st[s_i] = None
+
+        free = [i for i, r in enumerate(st) if r is None]
+        while free and scheduler.has_queued():
+            req, enq = scheduler.next_request(now)
+            slot = free.pop(0)
+            admit_s = now
+            first, first_logits = eng.admit(
+                slot, lm_prompt_tokens(req, vocab), rid=req.rid)
+            bucket = eng.bucket_for(min(req.size, eng.prompt_buckets[-1]))
+            now += prefill_s[bucket]
+            target = lm_new_tokens(req, *new_token_range)
+            st[slot] = {
+                "req": req, "enq": enq, "admit_s": admit_s,
+                "ttft_s": now - req.arrival_s,
+                "target": target, "gen": 1, "engine": e, "slot": slot,
+                "bucket": bucket,
+                "toks": [np.asarray([first], np.int32)],
+                "logits": [first_logits[None]] if collect_logits else None}
+            dispatches.append({
+                "rid": req.rid, "admit_s": admit_s, "engine": e,
+                "slot": slot, "bucket": bucket, "prompt_len": req.size,
+                "new_tokens": target})
+
+        alive = [i for i, r in enumerate(st) if r is not None]
+        if alive:
+            toks_seq, logits_seq = eng.decode_chunk()
+            for s_i in alive:
+                rec = st[s_i]
+                take = min(K, rec["target"] - rec["gen"])
+                if take > 0:
+                    rec["toks"].append(toks_seq[:take, s_i].copy())
+                    if collect_logits:
+                        rec["logits"].append(logits_seq[:take, s_i].copy())
+                    rec["gen"] += take
+            n_chunks += 1
+            occupancy_sum += len(alive)
+            t[e] = now + chunk_s
+        elif ai < len(arrivals):
+            t[e] = max(now, arrivals[ai].arrival_s)
+        else:
+            t[e] = _INF
+
+    requests_out, latencies, ttfts, waits = [], [], [], []
+    met = late = gen_total = 0
+    for req in trace.requests:
+        if req.rid in shed:
+            requests_out.append({
+                "rid": req.rid, "klass": req.klass, "prompt_len": req.size,
+                "arrival_s": req.arrival_s, "shed": True, "met": False})
+            continue
+        r = done[req.rid]
+        requests_out.append(r)
+        latencies.append(r["latency_s"])
+        ttfts.append(r["ttft_s"])
+        waits.append(r["admit_s"] - req.arrival_s)
+        gen_total += r["new_tokens"]
+        met += int(r["met"])
+        late += int(not r["met"])
+
+    total = len(trace.requests)
+    makespan = max((r["completion_s"] for r in done.values()), default=0.0)
+    report = {
+        "scenario": trace.scenario,
+        "seed": trace.seed,
+        "mode": "elastic-continuous",
+        "engines": pool.reserve,
+        "max_replicas": pool.max_replicas,
+        "n_slots": pool.n_slots,
+        "chunk": K,
+        "prompt_buckets": list(pool.prompt_buckets),
+        "requests": total,
+        "served_requests": total - len(shed),
+        "shed_requests": len(shed),
+        "deadline_miss_rate": (late + len(shed)) / total if total else 0.0,
+        "generated_tokens": gen_total,
+        "virtual_makespan_s": makespan,
+        "latency": latency_summary(latencies),
+        "ttft": latency_summary(ttfts),
+        "queue_wait": latency_summary(waits),
+        "decode_chunks": n_chunks,
+        "chunk_occupancy": (occupancy_sum / (n_chunks * pool.n_slots)
+                            if n_chunks else 0.0),
+        "recompiles_after_warmup": pool.trace_count - traces_at_start,
+        "scale_ups": scale_ups,
+        "scale_downs": scale_downs,
+        "kills": kills,
+        "recoveries": recoveries,
+        "scale_events": scale_log,
+        "faults": fault_log,
+    }
+    return LMTrafficResult(report=report, requests=requests_out,
+                           tokens=tokens_out, logits=logits_out,
+                           dispatches=dispatches)

@@ -41,7 +41,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serve.metrics import latency_summary, padding_waste, rate_per_s
+from repro.serve.metrics import (latency_summary, padding_waste, rate_per_s,
+                                 service_median)
 from repro.serve.scheduler import MicroBatchScheduler, SlotScheduler
 from repro.serve.traffic import Trace, lm_new_tokens, lm_prompt_tokens
 
@@ -82,8 +83,8 @@ def calibrate_service_models(pools, image_shape, iters=3):
             t0 = time.perf_counter()
             jax.block_until_ready(engine.infer(imgs))
             samples[(i, b)].append(time.perf_counter() - t0)
-    return [{b: sorted(samples[(i, b)])[len(samples[(i, b)]) // 2]
-             for b in pool.buckets} for i, pool in enumerate(pools)]
+    return [{b: service_median(samples[(i, b)]) for b in pool.buckets}
+            for i, pool in enumerate(pools)]
 
 
 def default_image_fn(cfg):
@@ -486,14 +487,9 @@ def calibrate_lm_service(pool, iters=3):
             chunks.append(time.perf_counter() - t0)
             eng.evict(0)
     pool.reset()
-
-    def median(xs):
-        xs = sorted(xs)
-        return xs[len(xs) // 2]
-
     n_b = len(eng.prompt_buckets)
-    return {"prefill_s": {b: median(xs[1:]) for b, xs in pre.items()},
-            "chunk_s": median(chunks[n_b:])}
+    return {"prefill_s": {b: service_median(xs[1:]) for b, xs in pre.items()},
+            "chunk_s": service_median(chunks[n_b:])}
 
 
 @dataclasses.dataclass

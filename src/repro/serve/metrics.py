@@ -83,6 +83,19 @@ def latency_summary(samples_s) -> dict:
     return out
 
 
+def service_median(samples_s) -> float:
+    """Median measured service seconds — the calibration statistic every
+    serving frontend freezes its virtual clock on (`calibrate_service_models`
+    per ViT bucket, `calibrate_lm_service` per prompt bucket / decode chunk).
+
+    Nearest-rank p50 over the samples (the same order-statistic convention
+    as `latency_summary`): always an observed sample, well-defined from n=1,
+    and at the odd sample counts the calibrators use (iters=3) identical to
+    the classic `sorted(xs)[n // 2]` median both previously inlined.
+    """
+    return nearest_rank(sorted(float(x) for x in samples_s), 50)
+
+
 def rate_per_s(count, seconds) -> float:
     """Throughput `count / seconds`; 0 when no time elapsed (an empty or
     shed-everything run must still serialize). Used for goodput (images/s)

@@ -79,12 +79,19 @@ class ThreadPoolReplicas(_ReplicaBase):
         self.n_slots = n_replicas
         self._pool = concurrent.futures.ThreadPoolExecutor(
             max_workers=n_replicas, thread_name_prefix="vit-replica")
+        self._closed = False
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
 
     def _engine_for(self, slot: int) -> BucketedViTEngine:
         return self.engines[slot % len(self.engines)]
 
     def submit(self, slot: int, images) -> concurrent.futures.Future:
         """Future resolving to (logits, measured wall seconds)."""
+        if self._closed:
+            raise RuntimeError("submit() on a closed ThreadPoolReplicas")
         engine = self._engine_for(slot)
 
         def run():
@@ -95,6 +102,13 @@ class ThreadPoolReplicas(_ReplicaBase):
         return self._pool.submit(run)
 
     def close(self):
+        """Idempotent shutdown: waits for in-flight submissions (their
+        Futures stay resolvable after close), then marks the pool closed —
+        a second close is a no-op and a submit after close raises rather
+        than silently queueing onto a dead executor."""
+        if self._closed:
+            return
+        self._closed = True
         self._pool.shutdown(wait=True)
 
 

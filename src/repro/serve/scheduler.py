@@ -129,6 +129,21 @@ class MicroBatchScheduler:
         self.admitted_requests += 1
         return True
 
+    def requeue(self, parts):
+        """Return in-flight Parts (a killed replica's micro-batch) to the
+        FRONT of their class queues — failure recovery, not admission.
+
+        The parts were at their class heads when the batch was formed
+        (dispatch pops heads only), so pushing them back in reverse order
+        restores the exact pre-dispatch queue state: FIFO-within-class and
+        the original `enqueued_s` stamps survive, and the retry dispatch is
+        a pure function of virtual state like every other decision. No
+        admission counters move — these requests were already admitted.
+        """
+        for p in reversed(tuple(parts)):
+            self._queues[p.req.klass].appendleft(p)
+            self.queued_images += p.size
+
     def has_queued(self) -> bool:
         return self.queued_images > 0
 
@@ -251,6 +266,17 @@ class SlotScheduler:
         self.queued_requests += 1
         self.admitted_requests += 1
         return True
+
+    def requeue(self, reqs_with_enq):
+        """Failure recovery: push (Request, enqueued_s) pairs back to the
+        FRONT of their class queues (reverse order restores the exact
+        pre-dispatch state, as in MicroBatchScheduler.requeue). A killed
+        engine's in-progress requests restart from prefill on another
+        engine — greedy decode is deterministic, so the retry regenerates
+        bit-identical tokens. Admission counters don't move."""
+        for req, enq in reversed(tuple(reqs_with_enq)):
+            self._queues[req.klass].appendleft((req, enq))
+            self.queued_requests += 1
 
     def has_queued(self) -> bool:
         return self.queued_requests > 0

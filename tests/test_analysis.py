@@ -290,3 +290,29 @@ def test_regression_vit_serving_audit_clean():
     for pol in SWEEP_POLICIES:
         for b in DEFAULT_BUCKETS:
             assert f"vit/{pol}/frozen/bucket={b}" in names
+
+
+def test_regression_elastic_warm_pool_audit_clean_and_exact():
+    # The elastic audit must cover EXACTLY the surface the zero-recompile
+    # invariant counts: every reserve engine (parked spares included) ×
+    # every bucket, on both the dense primary and the shiftadd degrade arm
+    # — and every reserve engine must be a drop-in replica of engine 0
+    # (JX008), or warm-pool replacement would break bit-identical replay.
+    findings, audited = jaxpr_audit.audit_elastic_serving(
+        max_replicas=2, spares=1)
+    assert findings == [], [f.format() for f in findings]
+    from repro.serve.vision import DEFAULT_BUCKETS
+    names = {a.where for a in audited}
+    expected = {f"elastic/primary/engine={e}/bucket={b}"
+                for e in range(3) for b in DEFAULT_BUCKETS}
+    expected |= {f"elastic/degrade/engine=0/bucket={b}"
+                 for b in DEFAULT_BUCKETS}
+    assert names == expected
+    assert len(audited) == len(expected)        # counts exact, no dupes
+    # Engines of one arm trace byte-for-byte comparable programs: the
+    # inventory's equation counts must agree per (arm, bucket).
+    by_key = {}
+    for a in audited:
+        arm, _, bucket = a.where.split("/")[1:]
+        by_key.setdefault((arm, bucket), set()).add(a.n_eqns)
+    assert all(len(v) == 1 for v in by_key.values()), by_key

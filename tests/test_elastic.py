@@ -1,0 +1,426 @@
+"""Elastic serving control plane (serve.elastic): autoscaler policy,
+warm-pool membership + the zero-recompile invariant, failure injection with
+requeue recovery, the degradation ladder, and bit-identical replay of the
+full control-plane history — on synthetic service models, so every
+scheduling assertion is machine-independent."""
+import jax
+import numpy as np
+import pytest
+
+from repro.distributed.fault_tolerance import ReplicaFault
+from repro.serve.elastic import (Autoscaler, AutoscalerPolicy, DegradeArm,
+                                 DegradePolicy, ElasticWarmPool,
+                                 default_autoscaler_policy, degrade_level,
+                                 serve_elastic_trace)
+from repro.serve.scheduler import MicroBatchScheduler, SlotScheduler
+from repro.serve.traffic import default_budgets, make_trace
+
+# Synthetic calibration: scheduling decisions depend only on these numbers,
+# never on machine speed (engine execution stays real; time stays virtual).
+SVC = {1: 0.010, 2: 0.018, 4: 0.030}
+BUCKETS = (1, 2, 4)
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    from repro.nn.vit import ShiftAddViT, ViTConfig
+
+    cfg = ViTConfig(image_size=16, patch_size=4, n_classes=4, n_layers=1,
+                    d_model=32, n_heads=2, d_ff=64)
+    model = ShiftAddViT(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def warm_pool(tiny_model):
+    model, params = tiny_model
+    pool = ElasticWarmPool(model, params, max_replicas=2, spares=1,
+                           buckets=BUCKETS).warmup()
+    yield pool
+    pool.close()
+
+
+@pytest.fixture(scope="module")
+def degrade_pool(tiny_model):
+    model, params = tiny_model
+    pool = ElasticWarmPool(model, params, max_replicas=1, spares=0,
+                           buckets=BUCKETS).warmup()
+    yield pool
+    pool.close()
+
+
+def _sched(max_queue_images=32):
+    return MicroBatchScheduler(BUCKETS, SVC, slack_s=0.015, linger_s=0.030,
+                               max_queue_images=max_queue_images)
+
+
+def _trace(n=60, seed=0, utilization=1.2, scenario="diurnal"):
+    capacity = BUCKETS[-1] / SVC[BUCKETS[-1]]      # one replica, img/s
+    return make_trace(scenario, n, seed,
+                      target_images_per_s=utilization * capacity,
+                      budgets_s=default_budgets(SVC[BUCKETS[-1]]),
+                      max_size=BUCKETS[-1])
+
+
+# ---------------------------------------------------------------------------
+# Autoscaler policy: pure decision logic
+# ---------------------------------------------------------------------------
+
+def test_autoscaler_backfill_below_min_bypasses_cooldown():
+    sc = Autoscaler(AutoscalerPolicy(min_replicas=2, max_replicas=3,
+                                     up_cooldown_s=100.0))
+    sc.last_up_s = 0.0
+    # n_active < min always grows, whatever the cooldown or backlog says.
+    assert sc.decide(0.001, n_active=1, n_idle=0, backlog_s=0.0) == +1
+
+
+def test_autoscaler_grows_on_backlog_and_respects_cooldown():
+    p = AutoscalerPolicy(min_replicas=1, max_replicas=3, up_backlog_s=0.03,
+                         up_cooldown_s=0.05)
+    sc = Autoscaler(p)
+    # per-replica backlog 0.08/1 > 0.03 → grow.
+    assert sc.decide(1.0, n_active=1, n_idle=0, backlog_s=0.08) == +1
+    sc.last_up_s = 1.0
+    # same pressure inside the cooldown → hold.
+    assert sc.decide(1.02, n_active=2, n_idle=0, backlog_s=0.16) == 0
+    # cooldown elapsed → grow again; at max_replicas → hold forever.
+    assert sc.decide(1.06, n_active=2, n_idle=0, backlog_s=0.16) == +1
+    assert sc.decide(9.00, n_active=3, n_idle=0, backlog_s=9.99) == 0
+
+
+def test_autoscaler_urgency_requires_no_idle_slot():
+    p = AutoscalerPolicy(min_replicas=1, max_replicas=2, up_backlog_s=9e9,
+                         slack_up_s=0.06)
+    sc = Autoscaler(p)
+    # Head forces dispatch in 0.01 s < slack_up with all replicas busy.
+    assert sc.decide(0.0, n_active=1, n_idle=0, backlog_s=0.0,
+                     until_forced_s=0.01) == +1
+    # An idle replica can absorb the urgent head — no growth.
+    assert sc.decide(0.0, n_active=1, n_idle=1, backlog_s=0.0,
+                     until_forced_s=0.01) == 0
+
+
+def test_autoscaler_shrinks_only_idle_and_cooled_down():
+    p = AutoscalerPolicy(min_replicas=1, max_replicas=3, up_backlog_s=9.0,
+                         down_backlog_s=0.01, down_cooldown_s=0.1)
+    sc = Autoscaler(p)
+    assert sc.decide(5.0, n_active=2, n_idle=1, backlog_s=0.0) == -1
+    sc.last_down_s = 5.0
+    assert sc.decide(5.05, n_active=2, n_idle=1, backlog_s=0.0) == 0
+    # Never below min, never with no idle replica, never under backlog.
+    assert sc.decide(9.0, n_active=1, n_idle=1, backlog_s=0.0) == 0
+    assert sc.decide(9.0, n_active=2, n_idle=0, backlog_s=0.0) == 0
+    assert sc.decide(9.0, n_active=2, n_idle=1, backlog_s=5.0) == 0
+
+
+def test_default_autoscaler_policy_scales_with_service_time():
+    p = default_autoscaler_policy(0.04, min_replicas=1, max_replicas=4)
+    assert p.up_backlog_s == pytest.approx(0.04)
+    assert p.down_cooldown_s == pytest.approx(4 * p.up_cooldown_s)
+    assert p.down_backlog_s < p.up_backlog_s
+
+
+# ---------------------------------------------------------------------------
+# Degradation ladder: pure decision logic
+# ---------------------------------------------------------------------------
+
+def test_degrade_level_ladder():
+    p = DegradePolicy(order=("relaxed", "standard", "interactive"),
+                      min_backlog_s=0.03, step_backlog_s=0.06)
+    # Unsaturated pools never degrade, whatever the backlog.
+    assert degrade_level(p, saturated=False, backlog_s=9.9) == 0
+    # Saturated: ladder engages past min_backlog, one class per step.
+    assert degrade_level(p, saturated=True, backlog_s=0.02) == 0
+    assert degrade_level(p, saturated=True, backlog_s=0.05) == 1
+    assert degrade_level(p, saturated=True, backlog_s=0.10) == 2
+    # Capped at the class count.
+    assert degrade_level(p, saturated=True, backlog_s=99.0) == 3
+
+
+def test_degrade_level_default_step_is_one_class():
+    p = DegradePolicy(min_backlog_s=0.01)     # step defaults to inf
+    assert degrade_level(p, saturated=True, backlog_s=1e9) == 1
+
+
+# ---------------------------------------------------------------------------
+# Warm pool: membership verbs and the zero-recompile invariant
+# ---------------------------------------------------------------------------
+
+def test_warm_pool_membership(warm_pool):
+    pool = warm_pool
+    pool.reset_membership()
+    assert pool.reserve == 3 and pool.n_parked == 3 and pool.n_active == 0
+    # attach takes the lowest parked id; active stays sorted.
+    assert pool.attach() == 0 and pool.attach() == 1
+    # max_replicas caps the ACTIVE set even though a spare is parked.
+    assert pool.attach() is None and pool.n_parked == 1
+    pool.detach(0)
+    assert pool.active == [1] and pool.attach() == 0   # lowest again
+    pool.kill(1)
+    assert pool.state[1] == "dead" and pool.active == [0]
+    # The dead engine is never reused; the spare is.
+    assert pool.attach() == 2 and pool.attach() is None
+    pool.reset_membership()
+    assert pool.n_parked == 3 and pool.speed_factor == [1.0] * 3
+
+
+def test_warm_pool_trace_count_spans_all_reserve_engines(warm_pool):
+    pool = warm_pool
+    pool.reset_membership()
+    tc = pool.trace_count
+    # Warmup compiled every bucket on every reserve engine — parked spares
+    # included — so membership changes and serving trace NOTHING.
+    assert tc >= pool.reserve * len(BUCKETS)
+    pool.attach()
+    img = np.zeros((2, 16, 16, 3), np.float32)
+    pool.submit(0, img).result()
+    pool.detach(0)
+    pool.attach()
+    pool.kill(0)
+    pool.attach()                                 # the spare
+    pool.submit(1, img).result()
+    assert pool.trace_count == tc                 # the elastic invariant
+    pool.reset_membership()
+
+
+def test_warm_pool_submit_guards(warm_pool):
+    pool = warm_pool
+    pool.reset_membership()
+    with pytest.raises(AssertionError):
+        pool.submit(0, np.zeros((1, 16, 16, 3), np.float32))   # parked
+
+
+# ---------------------------------------------------------------------------
+# Scheduler requeue: recovery restores the exact pre-dispatch queue
+# ---------------------------------------------------------------------------
+
+def test_microbatch_requeue_restores_queue_state():
+    sched = _sched()
+    trace = _trace(n=12, seed=3)
+    for req in trace.requests:
+        sched.offer(req, req.arrival_s)
+    now = trace.horizon_s + 1.0
+    queued_before = sched.queued_images
+    b1 = sched.form_batch(now)
+    sched.requeue(b1.parts)
+    assert sched.queued_images == queued_before
+    b2 = sched.form_batch(now)
+    # The retry is bit-identical scheduling: same parts, same order, same
+    # enqueue stamps (so linger/deadline decisions replay identically).
+    assert [(p.rid, p.part_idx, p.enqueued_s) for p in b1.parts] \
+        == [(p.rid, p.part_idx, p.enqueued_s) for p in b2.parts]
+    assert (b1.bucket, b1.n_images) == (b2.bucket, b2.n_images)
+
+
+def test_slot_scheduler_requeue_restores_order():
+    sched = SlotScheduler()
+    trace = _trace(n=8, seed=5)
+    for req in trace.requests:
+        sched.offer(req, req.arrival_s)
+    now = trace.horizon_s
+    popped = [sched.next_request(now) for _ in range(3)]
+    sched.requeue(popped)
+    replayed = [sched.next_request(now) for _ in range(3)]
+    assert [(r.rid, e) for r, e in popped] == \
+        [(r.rid, e) for r, e in replayed]
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: the control plane on a real (tiny) engine pool
+# ---------------------------------------------------------------------------
+
+def _run_elastic(pool, degrade_pool=None, faults=(), trace=None,
+                 max_replicas=2, collect_logits=True):
+    pool.reset_membership()
+    trace = trace if trace is not None else _trace()
+    policy = default_autoscaler_policy(SVC[BUCKETS[-1]], min_replicas=1,
+                                       max_replicas=max_replicas)
+    degrade = None
+    if degrade_pool is not None:
+        degrade_pool.reset_membership()
+        degrade = DegradeArm(
+            pool=degrade_pool, scheduler=_sched(max_queue_images=None),
+            policy=DegradePolicy(min_backlog_s=SVC[BUCKETS[-1]],
+                                 step_backlog_s=2 * SVC[BUCKETS[-1]]))
+    return serve_elastic_trace(pool, _sched(), trace, policy=policy,
+                               faults=faults, degrade=degrade,
+                               collect_logits=collect_logits)
+
+
+def test_elastic_scales_and_beats_fixed_baseline(warm_pool, degrade_pool):
+    trace = _trace()
+    # Fixed baseline: the same loop pinned at one replica, nothing else.
+    warm_pool.reset_membership()
+    fixed = AutoscalerPolicy(min_replicas=1, max_replicas=1)
+    base = serve_elastic_trace(warm_pool, _sched(), trace, policy=fixed,
+                               collect_logits=False)
+    res = _run_elastic(warm_pool, degrade_pool, trace=trace,
+                       collect_logits=False)
+    assert base.report["deadline_miss_rate"] > 0      # overloaded by design
+    assert res.report["deadline_miss_rate"] \
+        < base.report["deadline_miss_rate"]
+    assert res.report["scale_ups"] >= 1
+    assert res.report["max_active"] == 2
+    assert res.report["recompiles_after_warmup"] == 0
+    assert res.report["shed_requests"] == 0
+    # Elasticity pays for fewer replica-seconds than a fixed max pool.
+    assert res.report["replica_seconds"] \
+        < 2 * res.report["virtual_makespan_s"]
+
+
+def test_elastic_kill_requeues_and_recovers(warm_pool, degrade_pool):
+    trace = _trace()
+    kill = (ReplicaFault(at_s=0.4 * trace.horizon_s, kind="kill", slot=0),)
+    res = _run_elastic(warm_pool, degrade_pool, faults=kill, trace=trace)
+    rep = res.report
+    assert rep["kills"] == 1 and rep["faults_fired"] == 1
+    assert rep["killed_batches"] <= 1
+    # Every admitted request completed: the killed replica's in-flight
+    # micro-batch was requeued and re-served from the warm pool.
+    assert rep["served_requests"] == rep["requests"]
+    assert all(not r["shed"] for r in res.requests)
+    assert rep["recompiles_after_warmup"] == 0        # recovery never traces
+    # A replacement was attached after the kill (scale-up or recovery).
+    kill_t = res.events["faults"][0][1]
+    assert any(kind in ("up", "recover") and t >= kill_t
+               for kind, t, _ in res.events["scale"])
+
+
+def test_elastic_straggler_eviction_feeds_autoscaler(warm_pool,
+                                                     degrade_pool):
+    trace = _trace()
+    slow = (ReplicaFault(at_s=0.3 * trace.horizon_s, kind="slowdown",
+                         slot=0, factor=4.0),)
+    res = _run_elastic(warm_pool, degrade_pool, faults=slow, trace=trace)
+    rep = res.report
+    # The monitor sees ratio 4.0 against a median of healthy 1.0s and
+    # quarantines the replica; the warm pool backfills it.
+    assert rep["straggler_evictions"] == 1
+    assert any(kind == "straggler_evict" for kind, *_ in
+               res.events["faults"])
+    assert rep["served_requests"] == rep["requests"]
+    assert rep["recompiles_after_warmup"] == 0
+
+
+def test_elastic_degradation_ladder_engages_when_saturated(warm_pool,
+                                                           degrade_pool):
+    # max_replicas=1 on a heavy trace: the pool saturates immediately and
+    # the ladder must shed classes to the degrade arm instead of dropping.
+    trace = _trace(n=40, utilization=1.6)
+    res = _run_elastic(warm_pool, degrade_pool, trace=trace,
+                       max_replicas=1, collect_logits=False)
+    rep = res.report
+    assert rep["degraded_requests"] >= 1
+    assert rep["shed_requests"] == 0
+    # Laxest-first: relaxed degrades before interactive.
+    by_klass = rep["degraded_by_class"]
+    assert by_klass["relaxed"] >= by_klass["interactive"]
+    degraded = [r for r in res.requests if r.get("arm") == "degraded"]
+    assert all(r["degrade_reason"] in ("ladder", "overflow")
+               for r in degraded)
+    assert rep["recompiles_after_warmup"] == 0
+
+
+def test_elastic_replay_bit_identical_with_faults(warm_pool, degrade_pool):
+    trace = _trace()
+    faults = (ReplicaFault(at_s=0.35 * trace.horizon_s, kind="kill",
+                           slot=0),
+              ReplicaFault(at_s=0.6 * trace.horizon_s, kind="slowdown",
+                           slot=0, factor=4.0))
+    r1 = _run_elastic(warm_pool, degrade_pool, faults=faults, trace=trace)
+    r2 = _run_elastic(warm_pool, degrade_pool, faults=faults, trace=trace)
+    # The full control-plane history replays: routing (incl. arm), scale
+    # timeline, fault firings, degradation decisions...
+    assert r1.elastic_signature() == r2.elastic_signature()
+    # ...and the logits are bit-identical, faults and degradation included.
+    assert set(r1.logits) == set(r2.logits)
+    assert all(np.array_equal(r1.logits[k], r2.logits[k])
+               for k in r1.logits)
+
+
+def test_elastic_logits_match_fault_free_run(warm_pool, degrade_pool):
+    # Scheduling, scaling, killing and requeueing may move WHEN a request
+    # runs, never WHAT it computes: logits must match the fault-free run
+    # bit for bit (batch-invariance contract under the control plane).
+    trace = _trace(n=30)
+    kill = (ReplicaFault(at_s=0.4 * trace.horizon_s, kind="kill", slot=0),)
+    r_fault = _run_elastic(warm_pool, None, faults=kill, trace=trace)
+    r_clean = _run_elastic(warm_pool, None, faults=(), trace=trace)
+    common = set(r_fault.logits) & set(r_clean.logits)
+    assert common
+    assert all(np.array_equal(r_fault.logits[k], r_clean.logits[k])
+               for k in common)
+
+
+# ---------------------------------------------------------------------------
+# Elastic LM: kill → requeue → restart-from-prefill, bit-identical tokens
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def lm_pool():
+    from repro.configs.base import ModelConfig
+    from repro.core.policy import SHIFTADD
+    from repro.nn.model import LanguageModel
+    from repro.serve.elastic import ElasticLMPool
+
+    cfg = ModelConfig(name="lm-elastic-test", family="dense",
+                      policy=SHIFTADD, n_layers=2, d_model=32, n_heads=2,
+                      n_kv_heads=2, d_ff=64, vocab_size=64, dtype="float32",
+                      scan_layers=True, remat="none",
+                      moe_primitives_capacity=2.0)
+    model = LanguageModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    pool = ElasticLMPool(model, params, max_replicas=2, spares=1,
+                         n_slots=2, prompt_buckets=(4, 8), chunk=4).warmup()
+    yield pool
+    pool.close()
+
+
+def _run_lm(pool, faults=(), n=24, seed=0):
+    from repro.serve.elastic import serve_elastic_lm_trace
+
+    # Synthetic LM timing law — decisions machine-independent, as above.
+    svc = {"prefill_s": {4: 0.008, 8: 0.012}, "chunk_s": 0.005}
+    per_req = svc["prefill_s"][4] + 3 * svc["chunk_s"]
+    cap_req_s = pool.n_slots / per_req
+    trace = make_trace("diurnal", n, seed,
+                       target_images_per_s=1.3 * cap_req_s * 4.0,
+                       budgets_s=default_budgets(svc["prefill_s"][8]
+                                                 + 6 * svc["chunk_s"]),
+                       max_size=8)
+    policy = AutoscalerPolicy(min_replicas=1, max_replicas=2,
+                              up_backlog_s=2 * per_req,
+                              up_cooldown_s=per_req,
+                              down_backlog_s=0.25 * per_req,
+                              down_cooldown_s=4 * per_req)
+    pool.reset_membership()
+    return serve_elastic_lm_trace(pool, SlotScheduler(), trace, svc,
+                                  policy=policy, per_request_s=per_req,
+                                  faults=faults)
+
+
+def test_elastic_lm_kill_recovers_with_identical_tokens(lm_pool):
+    kill_frac = 0.4
+    r_clean = _run_lm(lm_pool)
+    horizon = max(r["arrival_s"] for r in r_clean.requests)
+    kill = (ReplicaFault(at_s=kill_frac * horizon, kind="kill", slot=0),)
+    r_fault = _run_lm(lm_pool, faults=kill)
+    rep = r_fault.report
+    assert rep["kills"] == 1
+    assert rep["served_requests"] == rep["requests"]
+    assert rep["recompiles_after_warmup"] == 0
+    # A killed engine's in-progress requests restarted from prefill on a
+    # warm replacement — greedy decode makes the retry bit-identical.
+    assert set(r_fault.tokens) == set(r_clean.tokens)
+    assert all(np.array_equal(r_fault.tokens[k], r_clean.tokens[k])
+               for k in r_fault.tokens)
+
+
+def test_elastic_lm_replay_identical(lm_pool):
+    r1 = _run_lm(lm_pool, n=20, seed=2)
+    r2 = _run_lm(lm_pool, n=20, seed=2)
+    assert r1.dispatch_signature() == r2.dispatch_signature()
+    assert r1.report["scale_events"] == r2.report["scale_events"]
+    assert all(np.array_equal(r1.tokens[k], r2.tokens[k])
+               for k in r1.tokens)
+    assert r1.report["scale_ups"] + r1.report["recoveries"] >= 1

@@ -118,3 +118,102 @@ def test_elastic_restore_across_device_counts(tmp_path):
     leaves = jax.tree_util.tree_leaves(restored)
     assert all(np.all(np.isfinite(np.asarray(l))) for l in leaves
                if np.asarray(l).dtype.kind == "f")
+
+
+@pytest.mark.parametrize("n,expect", [
+    # Non-power-of-two survivors: the data axis takes the integer quotient
+    # (floor), so the mesh uses the largest expressible subset — product
+    # must stay <= n and the model axis must stay fixed at 16.
+    (100, ((6, 16), ("data", "model"))),
+    (17, ((1, 16), ("data", "model"))),
+    (33, ((2, 16), ("data", "model"))),
+    # Below the model axis the model axis itself shrinks, to the largest
+    # power of two that fits — including odd survivor counts.
+    (13, ((1, 8), ("data", "model"))),
+    (3, ((1, 2), ("data", "model"))),
+    # Degenerate 1-chip survival: a valid (1, 1) mesh, never 0.
+    (1, ((1, 1), ("data", "model"))),
+])
+def test_elastic_mesh_shape_non_pow2_and_degenerate(n, expect):
+    shape, axes = elastic_mesh_shape(n, model_parallel=16)
+    assert shape == expect[0] and axes == expect[1]
+    assert int(np.prod(shape)) <= n
+    assert all(d >= 1 for d in shape)
+
+
+def test_elastic_mesh_shape_multi_pod_non_pow2():
+    # 100 survivors multi-pod: 2 pods of floor(6/2)=3 data rows each.
+    shape, axes = elastic_mesh_shape(100, model_parallel=16, multi_pod=True)
+    assert shape == (2, 3, 16) and axes == ("pod", "data", "model")
+    # 1 chip multi-pod collapses to the degenerate single-pod mesh.
+    shape, axes = elastic_mesh_shape(1, model_parallel=16, multi_pod=True)
+    assert shape == (1, 1, 1) and int(np.prod(shape)) == 1
+
+
+def test_failure_injector_virtual_time_schedule():
+    from repro.distributed.fault_tolerance import ReplicaFault
+
+    faults = (ReplicaFault(at_s=2.0, kind="slowdown", slot=1, factor=3.0),
+              ReplicaFault(at_s=0.5, kind="kill", slot=0),
+              ReplicaFault(at_s=2.0, kind="kill", slot=0))
+    inj = FailureInjector(faults=faults)
+    # Sorted by (at_s, slot); next_fault_s sees the earliest unfired.
+    assert inj.next_fault_s() == 0.5
+    assert inj.due(0.4) == []
+    fired = inj.due(0.5)
+    assert [f.kind for f in fired] == ["kill"]
+    # Both t=2.0 faults pop together, slot order.
+    fired = inj.due(2.0)
+    assert [(f.at_s, f.slot) for f in fired] == [(2.0, 0), (2.0, 1)]
+    assert inj.next_fault_s() is None and inj.due(99.0) == []
+    assert len(inj.fired) == 3
+    # reset_faults rewinds for replay: the same schedule fires again.
+    inj.reset_faults()
+    assert inj.next_fault_s() == 0.5
+    assert len(inj.due(99.0)) == 3
+
+
+def test_replica_fault_rejects_unknown_kind():
+    from repro.distributed.fault_tolerance import ReplicaFault
+
+    with pytest.raises(AssertionError):
+        ReplicaFault(at_s=1.0, kind="powercycle")
+
+
+@pytest.fixture(scope="module")
+def tiny_vit_pool_parts():
+    from repro.nn.vit import ShiftAddViT, ViTConfig
+
+    cfg = ViTConfig(image_size=16, patch_size=4, n_classes=4, n_layers=1,
+                    d_model=32, n_heads=2, d_ff=64)
+    model = ShiftAddViT(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def test_threadpool_replicas_close_is_idempotent(tiny_vit_pool_parts):
+    from repro.serve.replicas import ThreadPoolReplicas
+
+    model, params = tiny_vit_pool_parts
+    pool = ThreadPoolReplicas(model, params, n_replicas=2,
+                              buckets=(1, 2)).warmup()
+    assert not pool.closed
+    pool.close()
+    assert pool.closed
+    pool.close()                      # double close: a no-op, no raise
+    assert pool.closed
+    with pytest.raises(RuntimeError):
+        pool.submit(0, np.zeros((1, 16, 16, 3), np.float32))
+
+
+def test_threadpool_replicas_close_with_pending_future(tiny_vit_pool_parts):
+    from repro.serve.replicas import ThreadPoolReplicas
+
+    model, params = tiny_vit_pool_parts
+    pool = ThreadPoolReplicas(model, params, n_replicas=1,
+                              buckets=(1, 2)).warmup()
+    fut = pool.submit(0, np.zeros((2, 16, 16, 3), np.float32))
+    pool.close()                      # waits for the in-flight submission
+    logits, wall_s = fut.result(timeout=0)   # already resolved by close()
+    assert logits.shape == (2, 4) and wall_s > 0
+    pool.close()                      # still idempotent after draining

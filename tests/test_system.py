@@ -59,8 +59,13 @@ def test_end_to_end_pretrain_reparam_finetune():
     sparams = sa.convert_from(dense, dparams, stage=2)
     acc_sa_0 = _eval_acc(sa, sparams, data)
     # Finetune at a conservative LR (the paper finetunes at 1e-5; higher
-    # rates can destabilize the freshly reparameterized model).
-    sparams, _ = _train(sa, sparams, data, steps=80, lr=3e-4)
+    # rates destabilize the freshly reparameterized model — at 3e-4 this
+    # run's loss recovers to ~0.44 by step 60 and then blows up to NaN by
+    # step 79, collapsing accuracy to chance: the power-of-two shift
+    # weights make the post-conversion loss surface sharper than the dense
+    # one, so the dense pretraining LR/10 is already past the edge of
+    # stability here).
+    sparams, _ = _train(sa, sparams, data, steps=80, lr=1e-4)
     acc_sa = _eval_acc(sa, sparams, data)
     # Finetuning must recover accuracy close to dense (paper Tab. 2/3).
     assert acc_sa > acc_dense - 0.2, (acc_dense, acc_sa_0, acc_sa)
