@@ -15,7 +15,11 @@ after warmup, zero deadline misses at the calibrated default load, shiftadd
 p99 at or below dense p99, bit-identical seeded replay on EVERY arm
 (shiftadd's MoE included — per-image capacity dispatch made it
 batch-invariant), and 1-vs-N-replica bit-identical per-request logits under
-diverging batch compositions (`one_vs_n_bit_identical_logits`).
+diverging batch compositions (`one_vs_n_bit_identical_logits`). The sweep
+also carries the telemetry-trained `router` arm (shiftadd weights, router
+fine-tuned on measured per-expert latencies — serve.telemetry +
+train.router_tune), gated router p99 ≤ shiftadd p99 with increased shift
+expert token share.
 """
 from __future__ import annotations
 
@@ -33,14 +37,20 @@ from repro.serve.traffic import SCENARIOS
 
 def run(scenario="poisson", requests=300, seed=0, replicas=2, arm="auto",
         utilization=0.4, image_size=56, layers=4, d_model=128, impl=None,
-        tune=None, verify_replay=True, verify_one_vs_n=True):
+        tune=None, verify_replay=True, verify_one_vs_n=True, telemetry=None,
+        router_steps=40):
+    # "router" is the telemetry-trained arm: shiftadd weights, measured
+    # per-expert latencies (TELEMETRY_experts.json or in-process probes),
+    # router fine-tuned against them (serve.frontend docstring).
     cfg = ViTConfig(image_size=image_size, n_layers=layers, d_model=d_model,
                     d_ff=2 * d_model)
     return traffic_sweep(
-        cfg, scenario=scenario, policies=("dense", "stage1", "shiftadd"),
+        cfg, scenario=scenario,
+        policies=("dense", "stage1", "shiftadd", "router"),
         n_requests=requests, seed=seed, replicas=replicas, arm=arm,
         utilization=utilization, impl=impl, tune=tune,
-        verify_replay=verify_replay, verify_one_vs_n=verify_one_vs_n)
+        verify_replay=verify_replay, verify_one_vs_n=verify_one_vs_n,
+        telemetry=telemetry, router_steps=router_steps)
 
 
 def pallas_arm(scenario="poisson", requests=300, seed=0, tune=None,
@@ -112,6 +122,13 @@ def main(rows=None):
     ap.add_argument("--tune", default=None, metavar="TUNE_kernels.json",
                     help="persisted autotune table (launch/autotune.py "
                          "output)")
+    ap.add_argument("--telemetry", default=None,
+                    metavar="TELEMETRY_experts.json",
+                    help="persisted expert telemetry (launch/tune_router.py "
+                         "output) for the router arm; absent/invalid → "
+                         "extracted in-process (fail-open)")
+    ap.add_argument("--router-steps", type=int, default=40,
+                    help="router fine-tune steps for the telemetry arm")
     ap.add_argument("--skip-pallas-arm", action="store_true",
                     help="omit the nested impl=pallas traffic arm")
     ap.add_argument("--out", default=None)
@@ -129,11 +146,19 @@ def main(rows=None):
             print(f"WARNING: could not load tune table {args.tune}; "
                   f"serving with default block caps")
 
+    telemetry = None
+    if args.telemetry:
+        from repro.serve.telemetry import load_telemetry
+        telemetry = load_telemetry(args.telemetry)
+        if telemetry is None:
+            print(f"WARNING: could not load telemetry {args.telemetry}; "
+                  f"the router arm will extract its own probes")
+
     rec = run(scenario=args.scenario, requests=args.requests, seed=args.seed,
               replicas=args.replicas, arm=args.arm,
               utilization=args.utilization, image_size=args.image_size,
               layers=args.layers, d_model=args.d_model, impl=args.impl,
-              tune=tune)
+              tune=tune, telemetry=telemetry, router_steps=args.router_steps)
     if not args.skip_pallas_arm:
         rec["pallas_arm"] = pallas_arm(
             scenario=args.scenario, requests=args.requests, seed=args.seed,
@@ -152,6 +177,16 @@ def main(rows=None):
               f"recompiles {r['recompiles_after_warmup']}")
     if "shiftadd_vs_dense_p99" in rec:
         print(f"shiftadd vs dense p99: {rec['shiftadd_vs_dense_p99']:.3f}x")
+    if "router_vs_shiftadd_p99" in rec:
+        ro = rec["policies"]["router"]
+        sa_share = rec["policies"]["shiftadd"].get(
+            "expert_token_share", {}).get("shift", 0.0)
+        ro_share = ro.get("expert_token_share", {}).get("shift", 0.0)
+        print(f"router vs shiftadd p99: "
+              f"{rec['router_vs_shiftadd_p99']:.3f}x  "
+              f"shift share {sa_share:.3f} → {ro_share:.3f}  "
+              f"(alpha source {ro.get('expert_latency_source')}, "
+              f"{ro.get('router_steps')} steps)")
     if "pallas_arm" in rec:
         arm = rec["pallas_arm"]
         p = arm["pallas"]["policies"]["shiftadd"]["latency"]

@@ -1,4 +1,4 @@
-"""CI gate for the traffic-serving benchmark (vit-traffic job).
+"""CI gate for the traffic-serving benchmark (vit-traffic / vit-router jobs).
 
     python benchmarks/check_traffic.py BENCH_traffic.json
 
@@ -14,13 +14,19 @@ Fails (exit 1) if, on the calibrated default-load trace:
   served requests, p95 at >= 20, else p50 — gating p99 at small n compared
   extrapolated noise (satellite bugfix; percentiles are now nearest-rank
   observed samples),
-- a replay/1-vs-N verification field is false, OR is MISSING from the
-  shiftadd arm. The shiftadd arm used to be silently exempt: before the
-  per-image capacity dispatch its logits depended on co-batching, the
-  bench could not verify it, and the gate's `if key in record` let the
-  absence pass. Batch invariance (ISSUE 5) makes the determinism gates
-  policy-complete, so an absent field on shiftadd now means the benchmark
-  did not verify what this gate exists to verify — a failure, not a skip.
+- the telemetry-trained `router` arm is missing, its latency exceeds the
+  analytic shiftadd arm's at the gate percentile, or its shift-expert token
+  share did not INCREASE over the analytic router's — the paper's §4.2
+  claim (router trained on real latencies sends more tokens to the cheap
+  expert and p99 does not regress), served and gated,
+- a replay/1-vs-N verification field is false, OR is MISSING from an MoE
+  arm (shiftadd or router). MoE arms used to be silently exempt: before
+  the per-image capacity dispatch their logits depended on co-batching,
+  the bench could not verify them, and the gate's `if key in record` let
+  the absence pass. Batch invariance (ISSUE 5) makes the determinism gates
+  policy-complete — the retrained router rides the same per-image capacity
+  dispatch, so it inherits the strict gate — and an absent field on an MoE
+  arm means the benchmark did not verify what this gate exists to verify.
 
 Verification fields: `replay_identical_routing` /
 `replay_bit_identical_logits` (same seed, same pool → same routing, same
@@ -40,12 +46,23 @@ from repro.serve.metrics import gate_percentile
 VERIFY_KEYS = ("replay_identical_routing", "replay_bit_identical_logits",
                "one_vs_n_bit_identical_logits")
 
+# Arms where a MISSING verification field is a failure, not a skip (the
+# MoE arms the batch-invariance contract exists for).
+STRICT_VERIFY_ARMS = ("shiftadd", "router")
 
-def main(argv):
-    if len(argv) != 2:
-        print(__doc__)
-        return 2
-    rec = json.load(open(argv[1]))
+
+def gate_record(rec, perf_gates=True) -> list:
+    """All gate failures for one BENCH_traffic.json record (prints the
+    per-arm summary lines as it goes).
+
+    perf_gates=False drops the shiftadd-vs-dense crossover failure (ratio
+    still printed) — the harness smoke runs at 16px/d=32 where dense wins
+    on raw speed and only the determinism + router-behavior gates are
+    meaningful; the CLI path (CI, real geometry) always gates it. The
+    router-vs-shiftadd gates stay on either way: the router arm shares the
+    shiftadd service model whenever their capacity plans agree, so its
+    latency gate is deterministic at any geometry.
+    """
     failures = []
     for name, r in rec.get("policies", {}).items():
         if r["recompiles_after_warmup"] > 0:
@@ -60,7 +77,7 @@ def main(argv):
                             f"the calibrated default load")
         for key in VERIFY_KEYS:
             if key not in r:
-                if name == "shiftadd":
+                if name in STRICT_VERIFY_ARMS:
                     failures.append(
                         f"{name}: {key} missing — the benchmark did not "
                         f"run the determinism verification on the MoE arm "
@@ -105,9 +122,64 @@ def main(argv):
         ratio = s_lat[key] / d_lat[key] if d_lat[key] else float("inf")
         print(f"shiftadd vs dense {key[:-2]}: {ratio:.3f}x "
               f"(n={min(d_lat['n'], s_lat['n'])}, gate key {key})")
-        if ratio > 1.0:
+        if perf_gates and ratio > 1.0:
             failures.append(f"shiftadd {key[:-2]} above dense on the same "
                             f"trace ({ratio:.3f}x > 1.0)")
+    if "router" not in pols:
+        failures.append("record has no router arm — the telemetry-trained "
+                        "router was not served (ROADMAP item-3 gate)")
+    elif "shiftadd" in pols:
+        ro, sa = pols["router"], pols["shiftadd"]
+        ro_lat, sa_lat = ro["latency"], sa["latency"]
+        key = gate_percentile(min(ro_lat["n"], sa_lat["n"]))
+        ratio = ro_lat[key] / sa_lat[key] if sa_lat[key] else float("inf")
+        ro_share = ro.get("expert_token_share", {}).get("shift")
+        sa_share = sa.get("expert_token_share", {}).get("shift")
+        src = ro.get("expert_latency_source", "absent")
+        print(f"router vs shiftadd {key[:-2]}: {ratio:.3f}x  "
+              f"shift share {sa_share} → {ro_share}  (alpha {src}"
+              + (f", service model shared with "
+                 f"{ro['service_model_shared_with']}"
+                 if "service_model_shared_with" in ro else "") + ")")
+        if ratio > 1.0:
+            failures.append(f"router {key[:-2]} above the analytic shiftadd "
+                            f"arm on the same trace ({ratio:.3f}x > 1.0) — "
+                            f"telemetry training must not regress latency")
+        if ro_share is None or sa_share is None:
+            failures.append("expert_token_share missing on the router or "
+                            "shiftadd arm — the share gate cannot run")
+        elif ro_share <= sa_share:
+            failures.append(
+                f"router shift-expert token share did not increase "
+                f"({sa_share:.3f} → {ro_share:.3f}) — the latency-aware "
+                f"loss should move tokens toward the cheap expert")
+    return failures
+
+
+def main(rows) -> None:
+    """benchmarks/run.py harness mode: tiny verified record, gate verdict."""
+    import time
+
+    try:
+        from benchmarks import bench_traffic
+    except ImportError:          # standalone: benchmarks/ is sys.path[0]
+        import bench_traffic
+
+    t0 = time.time()
+    rec = bench_traffic.run(requests=60, image_size=16, layers=2, d_model=32,
+                            router_steps=20, verify_replay=True,
+                            verify_one_vs_n=True)
+    failures = gate_record(rec, perf_gates=False)
+    rows.append(("traffic_gate", (time.time() - t0) * 1e6,
+                 f"failures={len(failures)}"))
+
+
+def cli(argv):
+    if len(argv) != 2:
+        print(__doc__)
+        return 2
+    rec = json.load(open(argv[1]))
+    failures = gate_record(rec)
     for f in failures:
         print(f"FAIL: {f}")
     if failures:
@@ -117,4 +189,4 @@ def main(argv):
 
 
 if __name__ == "__main__":
-    sys.exit(main(sys.argv))
+    sys.exit(cli(sys.argv))

@@ -9,6 +9,7 @@ is produced separately from the dry-run artifacts by benchmarks/roofline.py.
   bench_vit          — serving policy sweep (BENCH_vit.json's small twin)
   bench_serve        — LM prefill/decode serving path (BENCH_serve.json's)
   bench_traffic      — traffic frontend p99/goodput (BENCH_traffic.json's)
+  check_traffic      — its gate (crossover, router-vs-shiftadd, verify keys)
   bench_elastic      — elastic control plane: autoscale + faults + degrade
   check_elastic      — its gate (zero-miss, warm-pool invariant, replay)
   bench_lm_traffic   — LM continuous batching vs static refill
@@ -35,13 +36,15 @@ def main() -> None:
                             bench_kernels, bench_llloss, bench_lm_traffic,
                             bench_sensitivity, bench_serve, bench_traffic,
                             bench_vit, check_analysis, check_elastic,
-                            check_lm_traffic, check_vit_pallas)
+                            check_lm_traffic, check_traffic,
+                            check_vit_pallas)
 
     rows = []
     for mod in (bench_kernels, bench_breakdown, bench_energy, bench_vit,
-                bench_serve, bench_traffic, bench_elastic, bench_lm_traffic,
-                bench_sensitivity, bench_llloss, check_analysis,
-                check_elastic, check_lm_traffic, check_vit_pallas):
+                bench_serve, bench_traffic, check_traffic, bench_elastic,
+                bench_lm_traffic, bench_sensitivity, bench_llloss,
+                check_analysis, check_elastic, check_lm_traffic,
+                check_vit_pallas):
         t0 = time.time()
         mod.main(rows)
         rows.append((f"_{mod.__name__.split('.')[-1]}_wall",

@@ -82,6 +82,12 @@ class ModelConfig:
     # Capacity slack of the MoE-of-primitives dispatcher (paper §4.2 TPU
     # adaptation). Large values ⇒ no token drops (used by equivalence tests).
     moe_primitives_capacity: float = 1.25
+    # Deployment per-group token count of the MoE-of-primitives dispatcher —
+    # the regime its analytic α/capacity latencies are evaluated in (a ViT
+    # dispatches one image row of n_patches tokens per group). None (LMs:
+    # prefill groups a whole prompt, decode a single token) keeps the
+    # nominal-regime constant so the split never varies with group size.
+    moe_capacity_ref_tokens: Optional[int] = None
     # Decode KV-cache storage: "model" (activation dtype) or "int8"
     # (per-token-per-head scales; halves cache HBM — in the spirit of the
     # paper's quantized operands, KIVI-style).

@@ -50,15 +50,23 @@ def smooth_top1_prob(clean_logits, noise_std=1.0):
     Uses the normal-CDF of the margin between expert i's logit and the max of
     the *other* experts' logits. Differentiable everywhere.
     """
-    top = jnp.max(clean_logits, axis=-1, keepdims=True)
-    # For the argmax expert the relevant margin is vs the runner-up. (Computed
-    # by masking out the argmax rather than sorting — sort's gradient is
-    # broken on this jaxlib and a masked max is cheaper anyway.)
+    # Exactly ONE winner per token, ties broken deterministically toward the
+    # lowest index (argmax's first-occurrence rule — the same winner the
+    # dispatch argmax picks). A value test `clean_logits >= max` would mark
+    # every tied expert as the winner: each tied non-argmax expert then
+    # measures its margin against a max that still contains itself (second
+    # masks only the argmax slot), a self-referential zero with ZERO gradient
+    # — the router could never learn to break a tie — and the load estimate
+    # counts several "winners" per token.
     arg = jnp.argmax(clean_logits, axis=-1)
-    top_oh = jax.nn.one_hot(arg, clean_logits.shape[-1], dtype=bool)
-    second = jnp.max(jnp.where(top_oh, -jnp.inf, clean_logits), axis=-1, keepdims=True)
-    is_top = clean_logits >= top
-    margin = jnp.where(is_top, clean_logits - second, clean_logits - top)
+    is_top = jax.nn.one_hot(arg, clean_logits.shape[-1], dtype=bool)
+    # For the winner the relevant margin is vs the runner-up. (Computed by
+    # masking out the winner rather than sorting — sort's gradient is broken
+    # on this jaxlib and a masked max is cheaper anyway.) Losers measure vs
+    # the winner's own logit (gathered, so the gradient couples the pair).
+    second = jnp.max(jnp.where(is_top, -jnp.inf, clean_logits), axis=-1, keepdims=True)
+    winner = jnp.take_along_axis(clean_logits, arg[..., None], axis=-1)
+    margin = jnp.where(is_top, clean_logits - second, clean_logits - winner)
     # Harden against upstream divergence: inf logits give inf-inf = NaN
     # margins; the CDF saturates beyond ~±6σ anyway.
     margin = jnp.clip(jnp.nan_to_num(margin, posinf=30.0, neginf=-30.0),

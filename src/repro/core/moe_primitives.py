@@ -107,7 +107,7 @@ class MoEPrimitives:
                  expert_type="mlp", activation="gelu", capacity_factor=1.25,
                  latency_aware=True, router_noise=1.0,
                  dtype=jnp.float32, param_dtype=jnp.float32, name="moe",
-                 experts=None, latencies=None):
+                 experts=None, latencies=None, capacity_ref_tokens=None):
         """If `experts` (list of init/apply modules) is given it overrides the
         built-in expert construction — used by repro.nn to pair the
         architecture's own MLP flavor (SwiGLU, channel-mix, ...) as the Mult
@@ -137,14 +137,55 @@ class MoEPrimitives:
                 _LinearExpert(d_model, d_hidden, kind, dtype, param_dtype)
                 for kind in self.expert_kinds
             ]
-        # Analytic per-token latency of each expert on the target hardware —
-        # used for α_i (LL-loss) and the static capacity split. Nominal token
-        # count only sets the compute/memory-bound regime; ratios are stable.
+        # Per-expert latency estimates — used for α_i (LL-loss) and the static
+        # capacity split. Explicit values (serving telemetry, caller override)
+        # win; otherwise the analytic energy model is evaluated at
+        # `capacity_ref_tokens` — the DEPLOYMENT per-group token count (a
+        # ViT's per-image patch count), which sets the compute/memory-bound
+        # regime. The α/capacity regime is a per-feed constant, never a
+        # per-call function of the group size: one model must route
+        # identically across group sizes (LM prefill routes a whole prompt,
+        # decode routes single tokens — a size-dependent split would diverge
+        # them), so callers that dispatch varying group sizes leave the ref
+        # unset and get the NOMINAL_MOE_TOKENS fallback.
+        self.capacity_ref_tokens = (None if capacity_ref_tokens is None
+                                    else int(capacity_ref_tokens))
+        self._explicit_latencies = None
         if latencies is not None:
             self.latencies = list(latencies)
-        else:
-            self.latencies = energy.expert_latencies(
-                energy.NOMINAL_MOE_TOKENS, d_model, d_hidden, self.expert_kinds)
+
+    @property
+    def latencies(self):
+        """Per-expert latencies backing α_i and capacities — the feed's
+        regime constant. Reads return the explicit override when one was set
+        (telemetry table / caller), else the analytic model at
+        `capacity_ref_tokens` (falling back to `energy.NOMINAL_MOE_TOKENS`
+        when no deployment token count was pinned)."""
+        return self.latencies_at(None)
+
+    @latencies.setter
+    def latencies(self, value):
+        """Setting latencies (e.g. dropping in measured telemetry) invalidates
+        the memoized capacity plans — engines must be (re)built afterwards so
+        their frozen programs see the new split."""
+        self._explicit_latencies = (None if value is None
+                                    else [float(v) for v in value])
+        self._capacity_plans.clear()
+
+    def latencies_at(self, n_tokens=None):
+        """Latencies at a per-group token count — the single source of truth
+        for α_i and the capacity split. Explicit telemetry latencies are
+        measured at serving geometry already and are returned as-is; the
+        analytic fallback is evaluated at `n_tokens`, defaulting to the
+        feed's `capacity_ref_tokens` regime (serving buckets run 196-token
+        per-image groups, not the 1024-token nominal regime) and then to
+        NOMINAL_MOE_TOKENS."""
+        if self._explicit_latencies is not None:
+            return list(self._explicit_latencies)
+        if n_tokens is None:
+            n_tokens = self.capacity_ref_tokens or energy.NOMINAL_MOE_TOKENS
+        return energy.expert_latencies(int(n_tokens), self.d_model,
+                                       self.d_hidden, self.expert_kinds)
 
     # -- parameters ---------------------------------------------------------
     def init(self, key):
@@ -162,8 +203,11 @@ class MoEPrimitives:
 
     # -- capacity schedule ---------------------------------------------------
     def _capacity_weights(self):
+        # Regime latencies, NOT a function of the group size being planned:
+        # caps(n) and caps(m) must be the same split at different scales or
+        # mixed-group dispatch (LM prefill vs decode) routes inconsistently.
         if self.latency_aware:
-            return energy.inverse_latency_weights(self.latencies)
+            return energy.inverse_latency_weights(self.latencies_at(None))
         return [1.0 / self.n_experts] * self.n_experts
 
     def capacities(self, n_tokens: int):
@@ -349,7 +393,10 @@ class MoEPrimitives:
 
         # latency_aware=False is the paper's baseline arm (Tab. 7 ablation):
         # homogeneous treatment — uniform α — rather than no balance at all.
-        loss_lat = (jnp.asarray(self.latencies) if self.latency_aware
+        # α is evaluated at the feed's regime token count (capacity_ref_
+        # tokens) so the loss and the capacity split (same `latencies_at`)
+        # always agree on the regime, independent of this call's group size.
+        loss_lat = (jnp.asarray(self.latencies_at(None)) if self.latency_aware
                     else jnp.ones((self.n_experts,)))
         alpha = losses.latency_coefficients(loss_lat)
         balance = losses.latency_aware_moe_loss(

@@ -13,7 +13,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import energy
 from repro.core.moe_primitives import MoEPrimitives
 from repro.nn import layers as L
 from repro.nn.attention import Attention, MLAttention
@@ -49,13 +48,20 @@ def _make_feed(cfg, kind):
                   cfg.use_bias, dt, pdt)
             for ek in p.moe_experts
         ]
-        lat = energy.expert_latencies(energy.NOMINAL_MOE_TOKENS, cfg.d_model,
-                                      cfg.d_ff, p.moe_experts)
+        # No explicit latencies: the analytic model is evaluated at the
+        # model's DEPLOYMENT per-group token count (a ViT dispatches one
+        # image row of n_patches tokens per group — the regime the capacity
+        # split serves in). LM configs have no fixed per-group count (prefill
+        # groups a whole prompt, decode a single token), so they leave the
+        # ref unset and keep the nominal-regime constant — the split must not
+        # vary with group size or prefill and decode route differently. The
+        # telemetry loop (serve.telemetry.apply_expert_latencies) drops
+        # measured values in afterwards either way.
         return MoEPrimitives(cfg.d_model, cfg.d_ff, expert_kinds=p.moe_experts,
                              capacity_factor=cfg.moe_primitives_capacity,
                              latency_aware=p.latency_aware, router_noise=0.0,
-                             dtype=dt, param_dtype=pdt,
-                             experts=experts, latencies=lat)
+                             dtype=dt, param_dtype=pdt, experts=experts,
+                             capacity_ref_tokens=cfg.moe_capacity_ref_tokens)
     lin = p.mlp_linear() if p.mlp == "shift" else "dense"
     return L.MLP(cfg.d_model, cfg.d_ff, cfg.mlp_kind, lin, cfg.use_bias, dt, pdt)
 

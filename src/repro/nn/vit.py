@@ -48,7 +48,8 @@ class ViTConfig:
             causal=False, rope="none", norm="layernorm", use_bias=True,
             input_mode="embeddings", policy=self.policy, scan_layers=False,
             remat="none", dtype=self.dtype, param_dtype="float32",
-            moe_primitives_capacity=self.moe_capacity)
+            moe_primitives_capacity=self.moe_capacity,
+            moe_capacity_ref_tokens=self.n_patches)
 
 
 class ShiftAddViT:

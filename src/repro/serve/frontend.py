@@ -42,7 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.serve.metrics import (latency_summary, padding_waste, rate_per_s,
-                                 service_median)
+                                 service_median, service_median_warm)
 from repro.serve.scheduler import MicroBatchScheduler, SlotScheduler
 from repro.serve.traffic import Trace, lm_new_tokens, lm_prompt_tokens
 
@@ -73,17 +73,18 @@ def calibrate_service_models(pools, image_shape, iters=3):
     shape = tuple(image_shape)
     work = [(i, pool.engines[0], b) for i, pool in enumerate(pools)
             for b in pool.buckets]
-    for _, engine, b in work:                        # touch (already warm)
-        jax.block_until_ready(
-            engine.infer(jnp.zeros((b,) + shape, jnp.float32)))
+    # iters + 1 timed rounds; round 0 is the touch/cache-warm round and is
+    # discarded by `service_median_warm` — the same warmup convention as the
+    # LM calibrator, so neither service model absorbs first-round noise.
     samples = {(i, b): [] for i, _, b in work}
-    for _ in range(iters):
+    for _ in range(max(int(iters), 1) + 1):
         for i, engine, b in work:
             imgs = jnp.zeros((b,) + shape, jnp.float32)
             t0 = time.perf_counter()
             jax.block_until_ready(engine.infer(imgs))
             samples[(i, b)].append(time.perf_counter() - t0)
-    return [{b: service_median(samples[(i, b)]) for b in pool.buckets}
+    return [{b: service_median_warm(samples[(i, b)], warmup=1)
+             for b in pool.buckets}
             for i, pool in enumerate(pools)]
 
 
@@ -283,6 +284,53 @@ def serve_trace(pool, scheduler: MicroBatchScheduler, trace: Trace, *,
 # Policy sweep under traffic: the BENCH_traffic.json record
 # ---------------------------------------------------------------------------
 
+def _build_router_arm(base_cfg, dense_model, dense_params, telemetry, *,
+                      buckets, impl, tune, iters, seed, steps, lr, shape):
+    """The telemetry-trained router arm: the shiftadd conversion with
+    measured (or model-mode) per-expert latencies applied and ONLY the
+    router fine-tuned against them (train.router_tune). Returns
+    (model, params, info, telemetry)."""
+    from repro.serve.telemetry import (apply_expert_latencies,
+                                       extract_expert_telemetry)
+    from repro.serve.vision import build_policy_model
+    from repro.train.router_tune import router_finetune
+
+    model, params = build_policy_model(base_cfg, "shiftadd", dense_model,
+                                       dense_params)
+    if telemetry is None:
+        telemetry = extract_expert_telemetry(model, params, buckets=buckets,
+                                             impl=impl, tune=tune,
+                                             iters=iters)
+    apply_expert_latencies(model, telemetry)
+    imgs = jax.random.normal(jax.random.PRNGKey(seed + 101), (16,) + shape)
+    params, history = router_finetune(model, params, imgs, steps=steps,
+                                      lr=lr)
+    info = {"expert_latency_source": f"telemetry:{telemetry.mode}",
+            "router_steps": len(history),
+            "router_balance_loss_first": history[0],
+            "router_balance_loss_last": history[-1]}
+    return model, params, info, telemetry
+
+
+def _moe_capacity_plans(model, n_tokens):
+    from repro.core.moe_primitives import MoEPrimitives
+
+    return [blk.feed.capacity_plan(n_tokens) for blk in model.blocks
+            if isinstance(blk.feed, MoEPrimitives)]
+
+
+def _arm_token_share(model, params, pool, images):
+    """Expert token share under the arm's own frozen serving params."""
+    from repro.serve.telemetry import measure_token_share
+
+    eng = pool.engines[0]
+    plan = getattr(eng, "plan", None)
+    run_params = plan.params if plan is not None else params
+    return measure_token_share(model, run_params, images,
+                               impl=getattr(eng, "impl", None),
+                               tune=getattr(eng, "tune", None))
+
+
 def traffic_sweep(base_cfg=None, *, scenario="poisson",
                   policies=("dense", "shiftadd"), n_requests=500, seed=0,
                   replicas=2, arm="auto", utilization=0.4, buckets=None,
@@ -290,7 +338,8 @@ def traffic_sweep(base_cfg=None, *, scenario="poisson",
                   slack_frac=0.5,
                   linger_frac=1.0, max_queue_images=None, target_p99_s=None,
                   calibrate_iters=3, verify_replay=False,
-                  verify_one_vs_n=False, collect_logits=False) -> dict:
+                  verify_one_vs_n=False, collect_logits=False,
+                  telemetry=None, router_steps=40, router_lr=0.05) -> dict:
     """Serve one seeded trace through every policy arm; return the
     BENCH_traffic.json record.
 
@@ -315,6 +364,19 @@ def traffic_sweep(base_cfg=None, *, scenario="poisson",
     (generally different) single-replica batch compositions bit-for-bit —
     the serving-level statement of the per-image batch-invariance contract,
     CI-gated on the shiftadd arm by benchmarks/check_traffic.py.
+
+    policy "router" is the telemetry-trained arm: the shiftadd conversion
+    with per-expert serving telemetry applied (`telemetry`, or extracted
+    in-process when None) and only the router fine-tuned against it
+    (`router_steps` × `router_lr`). When its capacity plans equal the
+    analytic shiftadd arm's (always in telemetry model mode — the analytic
+    fallback IS the serving-geometry model), the two arms compile
+    byte-identical program geometry and differ only in router weight
+    values, so the router arm REUSES the shiftadd service model
+    (`service_model_shared_with`): one timing law for one program geometry.
+    Calibrating them separately could only inject runner noise into the
+    router ≤ shiftadd p99 gate; with measured (TPU) telemetry the plans
+    genuinely differ and each arm keeps its own interleaved calibration.
     """
     import dataclasses as _dc
 
@@ -332,9 +394,17 @@ def traffic_sweep(base_cfg=None, *, scenario="poisson",
 
     pools = {}
     arms = {}
+    router_info = None
     for name in policies:
-        model, params = build_policy_model(base_cfg, name, dense_model,
-                                           dense_params)
+        if name == "router":
+            model, params, router_info, telemetry = _build_router_arm(
+                base_cfg, dense_model, dense_params, telemetry,
+                buckets=buckets, impl=impl, tune=tune,
+                iters=calibrate_iters, seed=seed, steps=router_steps,
+                lr=router_lr, shape=shape)
+        else:
+            model, params = build_policy_model(base_cfg, name, dense_model,
+                                               dense_params)
         arms[name] = (model, params)
         pools[name] = make_replicas(model, params, n_replicas=replicas,
                                     arm=arm, buckets=buckets, freeze=freeze,
@@ -345,6 +415,16 @@ def traffic_sweep(base_cfg=None, *, scenario="poisson",
     svc_list = calibrate_service_models(list(pools.values()), shape,
                                         iters=calibrate_iters)
     svc_models = dict(zip(pools, svc_list))
+    svc_shared = {}
+    if "router" in pools and "shiftadd" in pools:
+        n_pat = base_cfg.n_patches
+        if (_moe_capacity_plans(arms["router"][0], n_pat)
+                == _moe_capacity_plans(arms["shiftadd"][0], n_pat)):
+            # Identical capacity plans ⇒ identical compiled program geometry
+            # (only router weight VALUES differ) ⇒ one timing law. See the
+            # docstring's router-arm paragraph.
+            svc_models["router"] = dict(svc_models["shiftadd"])
+            svc_shared["router"] = "shiftadd"
 
     # One trace for every arm, calibrated on the slowest arm listed so the
     # load is feasible everywhere (dense is the slowest policy by design).
@@ -394,6 +474,18 @@ def traffic_sweep(base_cfg=None, *, scenario="poisson",
         rep = res.report
         if target_p99_s is not None:
             rep["slo_attained"] = rep["latency"]["p99_s"] <= target_p99_s
+        # MoE arms record the measured expert token share (seeded images,
+        # the arm's own frozen serving params) — the router-vs-shiftadd
+        # share gate in check_traffic.py reads these.
+        share_imgs = jax.random.normal(jax.random.PRNGKey(seed + 202),
+                                       (8,) + shape)
+        share = _arm_token_share(*arms[name], pool, share_imgs)
+        if share:
+            rep["expert_token_share"] = share
+        if name == "router":
+            rep.update(router_info)
+            if name in svc_shared:
+                rep["service_model_shared_with"] = svc_shared[name]
         if verify_replay:
             res2 = serve_trace(pool, make_sched(), trace,
                                collect_logits=True)
@@ -446,6 +538,18 @@ def traffic_sweep(base_cfg=None, *, scenario="poisson",
         if "shiftadd" in record["policies"]:
             record["shiftadd_vs_dense_p99"] = (
                 record["policies"]["shiftadd"]["latency"]["p99_s"] / d99)
+    pols = record["policies"]
+    if "router" in pols and "shiftadd" in pols:
+        record["telemetry_meta"] = (telemetry.meta_dict
+                                    if telemetry is not None else None)
+        s99 = pols["shiftadd"]["latency"]["p99_s"]
+        if s99 > 0:
+            record["router_vs_shiftadd_p99"] = (
+                pols["router"]["latency"]["p99_s"] / s99)
+        sa = pols["shiftadd"].get("expert_token_share", {})
+        ro = pols["router"].get("expert_token_share", {})
+        if "shift" in sa and "shift" in ro:
+            record["router_shift_share_gain"] = ro["shift"] - sa["shift"]
     return record
 
 
@@ -487,9 +591,13 @@ def calibrate_lm_service(pool, iters=3):
             chunks.append(time.perf_counter() - t0)
             eng.evict(0)
     pool.reset()
+    # Shared warmup convention (metrics.service_median_warm): drop round 0 —
+    # one sample per prompt bucket, n_b chunk samples (chunks interleave
+    # round-major across buckets).
     n_b = len(eng.prompt_buckets)
-    return {"prefill_s": {b: service_median(xs[1:]) for b, xs in pre.items()},
-            "chunk_s": service_median(chunks[n_b:])}
+    return {"prefill_s": {b: service_median_warm(xs, warmup=1)
+                          for b, xs in pre.items()},
+            "chunk_s": service_median_warm(chunks, warmup=n_b)}
 
 
 @dataclasses.dataclass

@@ -96,6 +96,23 @@ def service_median(samples_s) -> float:
     return nearest_rank(sorted(float(x) for x in samples_s), 50)
 
 
+def service_median_warm(samples_s, warmup=1) -> float:
+    """`service_median` with the leading compile/cache-warm samples dropped.
+
+    THE warmup convention for every service-model calibrator (ViT buckets,
+    LM prompt buckets and decode chunks): the first `warmup` samples of a
+    measurement series are discarded before taking the nearest-rank median.
+    The two calibrators previously disagreed — LM dropped its first sample
+    (`xs[1:]`) while ViT medianed over all of them — biasing the ViT service
+    model (and any telemetry α derived from it) toward first-round noise.
+    Falls back to the full series when discarding would leave nothing, so a
+    single-sample calibration still returns that sample.
+    """
+    xs = [float(x) for x in samples_s]
+    kept = xs[max(int(warmup), 0):]
+    return service_median(kept if kept else xs)
+
+
 def rate_per_s(count, seconds) -> float:
     """Throughput `count / seconds`; 0 when no time elapsed (an empty or
     shed-everything run must still serialize). Used for goodput (images/s)

@@ -388,11 +388,12 @@ def vit_energy_per_image(cfg: ViTConfig) -> dict:
     else:
         proj = lambda m, k, nn: energy.matmul_energy(m, k, nn, "fp16")
     if p.mlp == "moe_primitives":
-        # Same nominal token count and normalization the dispatcher's
-        # capacity split uses (nn/blocks, MoEPrimitives._capacity_weights),
-        # so the modeled Mult/Shift token split matches the one served.
+        # Same per-image token count and normalization the dispatcher's
+        # capacity split uses (MoEPrimitives.latencies_at at the serving
+        # group size — one image row), so the modeled Mult/Shift token split
+        # matches the one served.
         moe_w = energy.inverse_latency_weights(energy.expert_latencies(
-            energy.NOMINAL_MOE_TOKENS, d, f, p.moe_experts))
+            n, d, f, p.moe_experts))
     for _ in range(cfg.n_layers):
         for _ in range(4):                                     # q, k, v, o
             total += proj(n, d, d)

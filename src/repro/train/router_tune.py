@@ -1,0 +1,107 @@
+"""Router fine-tune stage: train ONLY the MoE routers against telemetry α.
+
+The back half of the serving-telemetry loop (ROADMAP item 3): after
+`serve.telemetry.apply_expert_latencies` drops measured per-expert latencies
+into the model's MoE feeds, this stage minimizes the latency-aware balance
+loss (core.losses, paper §4.2 Eq. 4 — L_IMP + L_LOAD with α_i = Lat_i/ΣLat_j)
+with every parameter FROZEN except the router kernels. Minimizing
+SCV(α·load) drives load ∝ 1/Lat: the router learns to send more tokens to
+the faster (shift/add) expert, which is the paper's claim this loop proves
+end-to-end — evaluation then serves the tuned router through the PR-3
+deployment freeze (`prepare_inference`), where per-image capacity dispatch
+keeps the retrained router batch-invariant for free.
+
+Freezing is a gradient mask, not an optimizer fork: gradients are zeroed
+everywhere outside `blocks/*/feed/router` and weight decay is 0, so AdamW's
+update is exactly zero on every frozen leaf (decay would otherwise shrink
+frozen weights with zero gradient).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.moe_primitives import MoEPrimitives
+from repro.optim.optimizer import adamw
+
+
+def router_grad_mask(params):
+    """0/1 float mask over a param tree: 1.0 on every leaf whose tree path
+    contains a "router" key (the MoE router kernels), 0.0 elsewhere."""
+    def leaf_mask(path, leaf):
+        keys = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+        del leaf
+        return jnp.float32(1.0 if "router" in keys else 0.0)
+    return jax.tree_util.tree_map_with_path(leaf_mask, params)
+
+
+def _moe_feeds(model):
+    return [blk.feed for blk in model.blocks
+            if isinstance(blk.feed, MoEPrimitives)]
+
+
+def router_finetune(model, params, images, *, steps=40, lr=0.05,
+                    noise_std=1.0):
+    """Fine-tune the MoE routers of `model` on its current feed latencies.
+
+    model/params: a ShiftAddViT (or compatible) whose MoE feeds carry the
+    latencies to balance against — apply the telemetry table first
+    (`serve.telemetry.apply_expert_latencies`). images: a fixed (B, H, W, C)
+    batch; the objective is the model's aggregate balance loss, which for a
+    converted (zero-init) router starts with ALL tokens on expert 0.
+
+    noise_std: smoothing width of the load estimator for the fine-tune
+    objective. The serving-policy feeds are built with router_noise=0, which
+    would saturate the smooth-top1 CDF (margins / 1e-6) and kill the load
+    gradient — so the feeds' router_noise is set to `noise_std` for (and
+    beyond) this stage. Serving is unaffected: the inference path routes on
+    clean argmax and never reads router_noise.
+
+    Returns (tuned_params, history) with history the per-step loss values
+    (history[0] is the pre-update loss of the first step).
+    """
+    feeds = _moe_feeds(model)
+    if not feeds:
+        raise ValueError("model has no MoEPrimitives feeds to fine-tune")
+    for feed in feeds:
+        feed.router_noise = float(noise_std)
+
+    mask = router_grad_mask(params)
+    opt = adamw(lr, weight_decay=0.0)
+    state = opt.init(params)
+    imgs = jnp.asarray(images)
+
+    @jax.jit
+    def step(params, state):
+        def loss_fn(p):
+            _, aux = model(p, imgs, train=False)
+            return aux["balance_loss"]
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        grads = jax.tree_util.tree_map(lambda g, m: g * m, grads, mask)
+        params, state = opt.update(grads, state, params)
+        return params, state, loss
+
+    history = []
+    for _ in range(max(int(steps), 1)):
+        params, state, loss = step(params, state)
+        history.append(float(loss))
+    return params, history
+
+
+def finetune_report(model, params, images, impl=None, tune=None):
+    """Frozen-engine evaluation of a (possibly fine-tuned) router: builds the
+    PR-3 DeployPlan for the serving token count and measures the expert
+    token share under real serving routing. Returns the report dict."""
+    from repro.serve.telemetry import measure_token_share
+
+    plan = model.prepare_inference(params, impl=impl,
+                                   token_counts=(model.cfg.n_patches,),
+                                   tune=tune)
+    share = measure_token_share(model, plan.params, images,
+                                impl=impl, tune=tune)
+    caps = {}
+    feeds = _moe_feeds(model)
+    if feeds:
+        c, _ = feeds[0].capacity_plan(model.cfg.n_patches)
+        caps = dict(zip(feeds[0].expert_kinds, c))
+    return {"expert_token_share": share, "capacities_per_image": caps}

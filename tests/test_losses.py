@@ -1,4 +1,6 @@
 """Latency-aware load-balancing loss (paper Eq. 4) properties."""
+import math
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -46,6 +48,46 @@ def test_smooth_top1_prob_bounds_and_direction():
     assert np.all(q >= 0) and np.all(q <= 1)
     assert q[0, 0] > q[0, 1]
     assert q[1, 1] > q[1, 0]
+
+
+def test_smooth_top1_prob_tied_logits_values():
+    """Exact two-way tie: both tied experts sit at the decision boundary
+    (Φ(0) = 0.5); the clearly-losing expert keeps its margin vs the winner."""
+    logits = jnp.asarray([[1.5, 1.5, 0.0]])
+    q = np.asarray(losses.smooth_top1_prob(logits, noise_std=0.75))
+    assert q[0, 0] == pytest.approx(0.5, abs=1e-6)
+    assert q[0, 1] == pytest.approx(0.5, abs=1e-6)
+    # loser's margin is vs the winning value: Φ((0.0 − 1.5) / 0.75) = Φ(−2)
+    phi_m2 = 0.5 * (1.0 + math.erf(-2.0 / math.sqrt(2.0)))
+    assert q[0, 2] == pytest.approx(phi_m2, abs=1e-4)
+
+
+def test_smooth_top1_prob_tie_gradient_nonzero():
+    """Regression (PR-10 bugfix): with exactly tied logits the pre-fix
+    margin for a tied non-argmax expert was self-referential
+    (logit_i − max(logits) with logit_i == max) — d(margin)/d(logit_i)
+    = 1 − 1 = 0, so the load estimator had ZERO gradient exactly where the
+    router most needs one (the decision boundary a zero-init router starts
+    on). Post-fix the margin for non-argmax experts is vs the winning
+    value, giving the tied runner-up a real positive gradient."""
+    logits = jnp.asarray([1.5, 1.5, 0.0])
+
+    def q1(l):
+        return losses.smooth_top1_prob(l[None], noise_std=1.0)[0, 1]
+
+    g = jax.grad(q1)(logits)
+    assert float(g[1]) > 0.1, np.asarray(g)  # pre-fix: exactly 0.0
+    assert np.all(np.isfinite(np.asarray(g)))
+
+
+def test_smooth_top1_prob_tie_deterministic_winner():
+    """Ties break to the lowest index (argmax convention) — the winner's
+    margin is vs the runner-up, so expert 0 of an all-tied row gets the
+    same q as expert 1 but routing (clean argmax) deterministically picks
+    index 0; q must not depend on evaluation order."""
+    logits = jnp.asarray([[2.0, 2.0, 2.0]])
+    q = np.asarray(losses.smooth_top1_prob(logits, noise_std=1.0))
+    np.testing.assert_allclose(q, 0.5, atol=1e-6)
 
 
 @settings(max_examples=30, deadline=None)

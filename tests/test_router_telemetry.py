@@ -1,0 +1,294 @@
+"""Serving-telemetry → router-training loop (ROADMAP item 3, PR 10).
+
+Covers the ExpertTelemetry schema + fail-open contract, the measured-α
+plumbing into MoEPrimitives (and the latency-regime bugfix it flushed
+out), the warmup-discarding calibration convention (satellite bugfix),
+router fine-tuning against a synthetic cost model, and batch invariance
+of the retrained router under the deployment freeze.
+"""
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import energy, losses
+from repro.core.policy import DENSE
+from repro.nn.vit import ShiftAddViT, ViTConfig
+from repro.serve import telemetry as tm
+from repro.serve.metrics import service_median_warm
+from repro.serve.vision import build_policy_model
+from repro.train.router_tune import router_finetune, router_grad_mask
+
+TINY = dict(image_size=16, patch_size=4, n_layers=2, d_model=32, n_heads=2,
+            d_ff=64, n_classes=4)
+
+
+def _tiny_shiftadd(seed=0, **over):
+    base_cfg = ViTConfig(**{**TINY, **over})
+    dense = ShiftAddViT(dataclasses.replace(base_cfg, policy=DENSE))
+    dense_params = dense.init(jax.random.PRNGKey(seed))
+    return build_policy_model(base_cfg, "shiftadd", dense, dense_params)
+
+
+def _moe_feeds(model):
+    return [blk.feed for blk in model.blocks
+            if hasattr(blk.feed, "expert_kinds")]
+
+
+# -- schema + fail-open ------------------------------------------------------
+
+def test_telemetry_schema_round_trip(tmp_path):
+    t = tm.ExpertTelemetry.from_dicts(
+        entries={"mult": {1: 2e-4, 8: 9e-4}, "shift": {1: 1e-4, 8: 5e-4}},
+        alpha={"mult": 3e-5, "shift": 1e-5},
+        service={1: 1e-3, 8: 4e-3},
+        meta={"mode": "model", "backend": "cpu", "buckets": [1, 8]})
+    path = tmp_path / "TELEMETRY_experts.json"
+    t.save(str(path))
+    back = tm.ExpertTelemetry.load(str(path))
+    assert back == t                       # frozen dataclass, full equality
+    assert back.expert_latencies(("mult", "shift")) == [3e-5, 1e-5]
+    assert back.expert_latencies(("shift", "mult")) == [1e-5, 3e-5]
+    assert back.bucket_seconds("shift") == {1: 1e-4, 8: 5e-4}
+    assert back.mode == "model"
+    assert back.meta_dict["buckets"] == (1, 8)
+
+
+def test_telemetry_load_fail_open(tmp_path):
+    assert tm.load_telemetry(str(tmp_path / "absent.json")) is None
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    assert tm.load_telemetry(str(bad)) is None
+    wrong = tmp_path / "wrong_schema.json"
+    wrong.write_text('{"schema": 999, "alpha_latencies": {}}')
+    assert tm.load_telemetry(str(wrong)) is None
+    with pytest.raises(AssertionError):
+        tm.ExpertTelemetry.load(str(wrong))   # strict load still strict
+
+
+# -- measured-α plumbing -----------------------------------------------------
+
+def test_apply_latencies_reaches_loss_alpha_and_capacity():
+    """apply_expert_latencies must change BOTH consumers of α: the balance
+    loss coefficients surfaced in the feed aux, and the capacity split."""
+    model, params = _tiny_shiftadd()
+    feed = _moe_feeds(model)[0]
+    n = model.cfg.n_patches
+    caps_before, _ = feed.capacity_plan(n)
+
+    telem = tm.ExpertTelemetry.from_dicts(
+        alpha={"mult": 3e-5, "shift": 1e-5}, meta={"mode": "measured"})
+    n_updated = tm.apply_expert_latencies(model, telem)
+    assert n_updated == len(_moe_feeds(model))
+    assert feed.latencies == [3e-5, 1e-5]
+
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, n, feed.d_model))
+    _, aux = feed(params["blocks"][0]["feed"], x, train=False)
+    np.testing.assert_allclose(
+        np.asarray(aux["alpha"]),
+        np.asarray(losses.latency_coefficients([3e-5, 1e-5])), rtol=1e-6)
+
+    caps_after, _ = feed.capacity_plan(n)     # setter cleared the memo
+    assert caps_after != caps_before
+    # 3:1 latency ratio → inverse-latency weights (0.25, 0.75)
+    assert caps_after[1] > caps_after[0]
+
+
+def test_latencies_at_serving_token_count():
+    """Regression (latency-regime bugfix): capacity weights must be
+    evaluated at the ACTUAL per-image token count, not the training-nominal
+    1024 — at 196 tokens/128d the mult:shift ratio differs enough to move
+    the static caps."""
+    model, _ = _tiny_shiftadd(image_size=56, d_model=128, n_heads=4,
+                              d_ff=256)
+    feed = _moe_feeds(model)[0]
+    n = model.cfg.n_patches
+    assert n == 196
+    assert feed.latencies_at(n) == energy.expert_latencies(
+        n, feed.d_model, feed.d_hidden, feed.expert_kinds)
+    # Expected caps derived from the analytic α at n=196 through the
+    # documented ceil/clamp/top-up schedule — NOT from NOMINAL_MOE_TOKENS.
+    weights = energy.inverse_latency_weights(feed.latencies_at(n))
+    expected = [min(int(math.ceil(feed.capacity_factor * n * w)), n)
+                for w in weights]
+    deficit = n - sum(expected)
+    for i in sorted(range(len(weights)), key=lambda j: -weights[j]):
+        if deficit <= 0:
+            break
+        bump = min(deficit, n - expected[i])
+        expected[i] += bump
+        deficit -= bump
+    caps, _ = feed.capacity_plan(n)
+    assert list(caps) == expected
+    # and the 1024-token regime really is a different split (the bug was
+    # silent precisely because both look plausible)
+    w_nominal = energy.inverse_latency_weights(energy.expert_latencies(
+        1024, feed.d_model, feed.d_hidden, feed.expert_kinds))
+    caps_nominal = [min(int(math.ceil(feed.capacity_factor * n * w)), n)
+                    for w in w_nominal]
+    assert caps_nominal != expected
+
+
+def test_model_mode_alpha_ordering_matches_analytic():
+    """Off-TPU extraction (mode=model) must rank experts exactly as the
+    analytic model at serving geometry does — telemetry and analytic arms
+    then disagree only in magnitude, never in routing direction."""
+    model, params = _tiny_shiftadd()
+    telem = tm.extract_expert_telemetry(model, params, buckets=(1, 2),
+                                        iters=1)
+    assert telem.mode == "model"
+    meta = telem.meta_dict
+    assert meta["measured"] is False
+    assert meta["n_patches"] == model.cfg.n_patches
+    feed = _moe_feeds(model)[0]
+    analytic = energy.expert_latencies(model.cfg.n_patches, feed.d_model,
+                                       feed.d_hidden, feed.expert_kinds)
+    telem_lat = telem.expert_latencies(feed.expert_kinds)
+    assert np.argsort(telem_lat).tolist() == np.argsort(analytic).tolist()
+    # wall probes still recorded for visibility, every bucket
+    for kind in feed.expert_kinds:
+        assert set(telem.bucket_seconds(kind)) == {1, 2}
+        assert all(s > 0 for s in telem.bucket_seconds(kind).values())
+
+
+# -- calibration warmup convention (satellite bugfix) ------------------------
+
+def test_service_median_warm_drops_warmup():
+    assert service_median_warm([10.0, 1.0, 2.0, 3.0], warmup=1) == 2.0
+    assert service_median_warm([10.0, 5.0, 1.0, 2.0, 3.0], warmup=2) == 2.0
+    # degenerate: everything discarded → fall back to the full series
+    assert service_median_warm([4.0], warmup=1) == 4.0
+
+
+def test_vit_calibrator_discards_first_round(monkeypatch):
+    """Regression: the ViT calibrator used to keep its first timed sample
+    (the LM calibrator discarded it), so a compile/cache-warm spike landed
+    in the service model. Scripted clock: round 0 measures 10.0 s, round 1
+    measures 0.5 s — the calibrated median must be the post-warmup 0.5."""
+    from repro.serve import frontend
+
+    class _Engine:
+        def infer(self, imgs):
+            return jnp.zeros(())
+
+    class _Pool:
+        buckets = (1,)
+        engines = [_Engine()]
+
+    script = iter([0.0, 10.0, 100.0, 100.5])
+    real = frontend.time.perf_counter
+
+    def fake_clock():
+        return next(script, real())
+
+    monkeypatch.setattr(frontend.time, "perf_counter", fake_clock)
+    svc = frontend.calibrate_service_models([_Pool()], (2, 2, 3), iters=1)[0]
+    assert svc[1] == pytest.approx(0.5)       # pre-fix: 10.0
+
+
+def test_bench_llloss_latency_source(tmp_path, monkeypatch):
+    """Regression: bench_llloss.py hardcoded [2.0e-5, 1.0e-5] expert
+    latencies — its α must come from the telemetry table when one exists
+    (fail-open) and from the analytic t=1 model otherwise, with the source
+    recorded."""
+    import importlib.util
+    import os
+
+    path = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                        "bench_llloss.py")
+    spec = importlib.util.spec_from_file_location("bench_llloss", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+
+    from repro.core.policy import ShiftAddPolicy
+    policy = ShiftAddPolicy(mlp="moe_primitives", latency_aware=True,
+                            balance_loss_weight=0.01)
+    cfg = ViTConfig(image_size=16, patch_size=4, n_classes=4, n_layers=2,
+                    d_model=48, n_heads=2, d_ff=96, policy=policy,
+                    moe_capacity=4.0)
+
+    monkeypatch.setattr(mod, "TELEMETRY_PATH",
+                        str(tmp_path / "absent.json"))
+    lat, src = mod._expert_latencies(cfg)
+    assert src == "analytic"
+    assert lat == energy.expert_latencies(1, cfg.d_model, cfg.d_ff,
+                                          policy.moe_experts)
+    assert lat != [2.0e-5, 1.0e-5]          # the old hardcode
+
+    table = tmp_path / "TELEMETRY_experts.json"
+    tm.ExpertTelemetry.from_dicts(
+        alpha={"mult": 3e-5, "shift": 1e-5},
+        meta={"mode": "measured"}).save(str(table))
+    monkeypatch.setattr(mod, "TELEMETRY_PATH", str(table))
+    lat, src = mod._expert_latencies(cfg)
+    assert src == "telemetry:measured"
+    assert lat == [3e-5, 1e-5]
+
+
+# -- router fine-tune --------------------------------------------------------
+
+def test_router_grad_mask_selects_only_router_leaves():
+    model, params = _tiny_shiftadd()
+    mask = router_grad_mask(params)
+    ones = [p for p, m in jax.tree_util.tree_leaves_with_path(mask)
+            if float(m) == 1.0]
+    assert ones and all(
+        any(getattr(k, "key", None) == "router" for k in p) for p in ones)
+
+
+def test_router_finetune_decreases_loss_and_moves_share():
+    """Synthetic cost model (4:1 latency gap): fine-tuning only the router
+    must drive the balance loss down and move token share from the
+    zero-init all-on-mult routing toward the cheap shift expert, while
+    leaving every non-router parameter bit-identical."""
+    model, params = _tiny_shiftadd()
+    telem = tm.ExpertTelemetry.from_dicts(
+        alpha={"mult": 4e-5, "shift": 1e-5}, meta={"mode": "measured"})
+    tm.apply_expert_latencies(model, telem)
+
+    shape = (model.cfg.image_size, model.cfg.image_size,
+             model.cfg.in_channels)
+    imgs = jax.random.normal(jax.random.PRNGKey(2), (8,) + shape)
+
+    share0 = tm.measure_token_share(model, params, imgs)
+    assert share0["shift"] == 0.0             # zero-init router: all mult
+
+    tuned, history = router_finetune(model, params, imgs, steps=12, lr=0.05)
+    assert history[-1] < history[0]
+
+    share1 = tm.measure_token_share(model, tuned, imgs)
+    assert share1["shift"] > share0["shift"]
+
+    mask = jax.tree_util.tree_map(lambda m: float(m) == 0.0,
+                                  router_grad_mask(params))
+    frozen_same = jax.tree_util.tree_map(
+        lambda frozen, a, b: (not frozen) or bool(jnp.array_equal(a, b)),
+        mask, params, tuned)
+    assert all(jax.tree_util.tree_leaves(frozen_same))
+
+
+def test_retrained_router_is_batch_invariant():
+    """The tuned router rides the same per-image capacity dispatch, so a
+    request's logits must be bit-identical whether served solo or
+    co-batched — the determinism gate check_traffic enforces on the
+    router arm, reproduced at unit scale."""
+    model, params = _tiny_shiftadd()
+    telem = tm.ExpertTelemetry.from_dicts(
+        alpha={"mult": 4e-5, "shift": 1e-5}, meta={"mode": "measured"})
+    tm.apply_expert_latencies(model, telem)
+    shape = (model.cfg.image_size, model.cfg.image_size,
+             model.cfg.in_channels)
+    imgs = jax.random.normal(jax.random.PRNGKey(3), (6,) + shape)
+    tuned, _ = router_finetune(model, params, imgs, steps=8, lr=0.05)
+
+    plan = model.prepare_inference(tuned,
+                                   token_counts=(model.cfg.n_patches,))
+    full = np.asarray(model.infer(plan.params, imgs))
+    solo = np.concatenate([np.asarray(model.infer(plan.params, imgs[i:i + 1]))
+                           for i in range(imgs.shape[0])])
+    np.testing.assert_array_equal(full, solo)
+    pair = np.asarray(model.infer(plan.params, imgs[2:4]))
+    np.testing.assert_array_equal(full[2:4], pair)

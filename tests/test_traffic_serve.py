@@ -263,10 +263,12 @@ def _load_check_traffic():
 
 
 def test_check_traffic_gate_requires_shiftadd_verification(tmp_path):
-    """The CI gate must FAIL when the shiftadd arm lacks the replay/1-vs-N
-    verification fields (the old `if key in record` silently skipped the
-    one arm the determinism gates exist for), must fail when any present
-    field is false, and must pass a fully-verified record."""
+    """The CI gate must FAIL when an MoE arm (shiftadd OR the
+    telemetry-trained router) lacks the replay/1-vs-N verification fields
+    (the old `if key in record` silently skipped the arms the determinism
+    gates exist for), must fail when any present field is false, must
+    enforce the router gates (arm present, p-latency at or below shiftadd,
+    shift token share increased), and must pass a fully-verified record."""
     gate = _load_check_traffic()
 
     def arm(**extra):
@@ -279,31 +281,53 @@ def test_check_traffic_gate_requires_shiftadd_verification(tmp_path):
 
     verified = {k: True for k in gate.VERIFY_KEYS}
     verified.update(one_vs_n_compared=10, one_vs_n_solo_shed=0)
+    share_lo = {"expert_token_share": {"mult": 1.0, "shift": 0.0}}
+    share_hi = {"expert_token_share": {"mult": 0.5, "shift": 0.5}}
 
-    def run(policies, ratio=0.9):
-        rec = {"policies": policies, "shiftadd_vs_dense_p99": ratio,
+    def policies(**over):
+        base = {"dense": arm(**verified),
+                "shiftadd": arm(**verified, **share_lo),
+                "router": arm(**verified, **share_hi)}
+        base.update(over)
+        return base
+
+    def run(pols, ratio=0.9):
+        rec = {"policies": pols, "shiftadd_vs_dense_p99": ratio,
                "trace": {"requests": 10}}
         p = tmp_path / "rec.json"
         p.write_text(__import__("json").dumps(rec))
-        return gate.main(["check_traffic", str(p)])
+        return gate.cli(["check_traffic", str(p)])
 
-    # Fully verified: passes.
-    assert run({"dense": arm(**verified), "shiftadd": arm(**verified)}) == 0
-    # shiftadd missing the verification fields: fails (no silent skip).
-    assert run({"dense": arm(**verified), "shiftadd": arm()}) == 1
+    # Fully verified: passes (router latency == shiftadd's, share up).
+    assert run(policies()) == 0
+    # An MoE arm missing the verification fields: fails (no silent skip) —
+    # shiftadd and router alike.
+    assert run(policies(shiftadd=arm(**share_lo))) == 1
+    assert run(policies(router=arm(**share_hi))) == 1
     # A false verification field fails on any arm.
     bad = dict(verified, one_vs_n_bit_identical_logits=False)
-    assert run({"dense": arm(**bad), "shiftadd": arm(**verified)}) == 1
+    assert run(policies(dense=arm(**bad))) == 1
     # A partial 1-vs-N comparison fails even when every boolean is true —
     # whether the shortfall shows up as solo-pool sheds or as a compared
     # count below the trace's request count (logits-collection regression).
     partial = dict(verified, one_vs_n_solo_shed=3, one_vs_n_compared=2)
-    assert run({"dense": arm(**verified), "shiftadd": arm(**partial)}) == 1
+    assert run(policies(shiftadd=arm(**partial, **share_lo))) == 1
     short = dict(verified, one_vs_n_compared=7)
-    assert run({"dense": arm(**verified), "shiftadd": arm(**short)}) == 1
+    assert run(policies(shiftadd=arm(**short, **share_lo))) == 1
     # Dense missing the fields is tolerated (custom sweeps may skip arms
     # the contract was never in question for).
-    assert run({"dense": arm(), "shiftadd": arm(**verified)}) == 0
+    assert run(policies(dense=arm())) == 0
+    # Router gates: missing arm, latency regression, or non-increasing
+    # shift share each fail.
+    no_router = policies()
+    del no_router["router"]
+    assert run(no_router) == 1
+    slow = arm(**verified, **share_hi)
+    slow["latency"] = {"p50_s": 0.2, "p95_s": 0.2, "p99_s": 0.2, "n": 10}
+    assert run(policies(router=slow)) == 1
+    assert run(policies(router=arm(**verified, **share_lo))) == 1
+    no_share = policies(router=arm(**verified))
+    assert run(no_share) == 1
 
 
 def test_per_replica_engines_arm():
